@@ -1,0 +1,36 @@
+"""Figures 4 & 5 — expected total cost vs r for both case studies.
+Writes CSV curves to artifacts/ and asserts the analytic r* is the argmin."""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from repro.core import costs, shp
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "artifacts", "curves")
+
+
+def _curve(name, cm, migrate, r_star, emit):
+    t0 = time.perf_counter_ns()
+    curve = shp.cost_curve(cm, migrate=migrate, num=1024)
+    us = (time.perf_counter_ns() - t0) / 1000.0
+    os.makedirs(OUT, exist_ok=True)
+    path = os.path.join(OUT, f"{name}.csv")
+    np.savetxt(path, curve, delimiter=",", header="r_over_n,expected_cost",
+               comments="")
+    i = int(np.argmin(curve[:, 1]))
+    emit(f"{name}.min_at_r_over_n", us,
+         f"{curve[i,0]:.4f} (analytic {r_star/cm.workload.n_docs:.4f})")
+    emit(f"{name}.min_cost", us, f"${curve[i,1]:.2f}")
+    assert abs(curve[i, 0] - r_star / cm.workload.n_docs) < 2e-3
+
+
+def run(emit):
+    cm1 = costs.case_study_1()
+    _curve("fig4_case1_no_migration", cm1, False,
+           shp.r_optimal_no_migration(cm1), emit)
+    cm2 = costs.case_study_2()
+    _curve("fig5_case2_migration", cm2, True,
+           shp.r_optimal_migration(cm2), emit)

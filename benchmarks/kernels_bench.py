@@ -1,0 +1,54 @@
+"""Kernel microbenchmarks (CPU wall-clock of the jitted public ops; the
+Pallas bodies run in interpret mode here — TPU numbers come from the
+roofline analysis, not this harness)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import topk as topk_mod
+from repro.kernels.entropy_scores import ops as ent_ops
+from repro.kernels.topk_filter import ops as tf_ops
+
+
+def _time(fn, *args, reps=20):
+    fn(*args)  # compile
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter_ns()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter_ns() - t0) / 1000.0 / reps
+
+
+def run(emit):
+    rng = np.random.default_rng(0)
+
+    logits = jnp.asarray(rng.standard_normal((64, 32000)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, 32000, 64), jnp.int32)
+    us = _time(lambda l, y: ent_ops.entropy_nll(l, y, use_pallas=False),
+               logits, labels)
+    emit("kernel.entropy_nll.ref_64x32000", us, "pure-jnp oracle")
+    us = _time(lambda l, y: ent_ops.entropy_nll(l, y), logits, labels, reps=3)
+    emit("kernel.entropy_nll.pallas_interpret_64x32000", us,
+         "Pallas body (interpret mode, correctness only)")
+
+    scores = jnp.asarray(rng.standard_normal(1 << 20), jnp.float32)
+    thr = jnp.float32(2.0)
+    us = _time(lambda s, t: tf_ops.topk_filter(s, t, use_pallas=False),
+               scores, thr)
+    emit("kernel.topk_filter.ref_1M", us, "pure-jnp oracle")
+
+    state = topk_mod.init(1024)
+    ids = jnp.arange(1 << 16, dtype=jnp.int32)
+    sc = jnp.asarray(rng.standard_normal(1 << 16), jnp.float32)
+    upd = jax.jit(topk_mod.update)
+    us = _time(upd, state, sc, ids)
+    emit("reservoir.update_64k_batch_k1024", us, "lax sort-merge path")
+    us = _time(lambda st, s, i: tf_ops.filter_then_merge(st, s, i), state, sc,
+               ids, reps=5)
+    emit("reservoir.filter_then_merge_64k_k1024", us,
+         "kernel filter + tiny exact merge")

@@ -1,0 +1,66 @@
+"""Tables I & II — the paper's two cloud case studies, recomputed from the
+listed prices. Prints each strategy's expected cost next to the paper's
+printed value (two of which are not derivable from the listed prices; see
+DESIGN.md §9)."""
+from __future__ import annotations
+
+import time
+
+from repro.core import costs, shp
+
+
+def _strategies(cm):
+    rows = []
+    r_nm = shp.r_optimal_no_migration(cm)
+    r_mg = shp.r_optimal_migration(cm)
+    if shp.r_is_valid(cm, r_nm):
+        rows.append(("two_tier_no_migration@r*", shp.cost_no_migration(cm, r_nm),
+                     r_nm / cm.workload.n_docs))
+    if shp.r_is_valid(cm, r_mg):
+        rows.append(("two_tier_migration@r*", shp.cost_with_migration(cm, r_mg),
+                     r_mg / cm.workload.n_docs))
+    rows.append(("all_tier_a", shp.cost_single_tier(cm, "a"), 1.0))
+    rows.append(("all_tier_b", shp.cost_single_tier(cm, "b"), 0.0))
+    return rows
+
+
+def table1(emit):
+    cm = costs.case_study_1()
+    t0 = time.perf_counter_ns()
+    r = shp.r_optimal_no_migration(cm)
+    plan = shp.plan_placement(cm)
+    us = (time.perf_counter_ns() - t0) / 1000.0
+    paper = {"r_over_n": 0.41233169, "two_tier_no_migration@r*": 35.19,
+             "two_tier_migration@r": 49.29, "all_tier_a": 37.20,
+             "all_tier_b": 99.12}
+    emit("table1.r_opt_over_N", us, f"{r / cm.workload.n_docs:.6f}"
+         f" (paper {paper['r_over_n']})")
+    for name, sc, rn in _strategies(cm):
+        emit(f"table1.{name}", us, f"${sc.total:.2f}")
+    # the paper's migration row is evaluated at the no-migration r*
+    mig_at_r = shp.cost_with_migration(cm, 0.41233169 * cm.workload.n_docs)
+    emit("table1.two_tier_migration@r_nm", us,
+         f"${mig_at_r.total:.2f} (paper {paper['two_tier_migration@r']})")
+    emit("table1.chosen_strategy", us, plan.strategy)
+    assert abs(r / cm.workload.n_docs - 0.41233169) < 5e-4
+    assert abs(shp.cost_no_migration(cm, r).total - 35.19) < 0.02
+
+
+def table2(emit):
+    cm = costs.case_study_2()
+    t0 = time.perf_counter_ns()
+    r = shp.r_optimal_migration(cm)
+    plan = shp.plan_placement(cm)
+    us = (time.perf_counter_ns() - t0) / 1000.0
+    emit("table2.r_opt_over_N", us, f"{r / cm.workload.n_docs:.6f} (paper 0.078)")
+    for name, sc, rn in _strategies(cm):
+        emit(f"table2.{name}", us, f"${sc.total:.2f}")
+    emit("table2.chosen_strategy", us, plan.strategy)
+    # paper: migration 142.82 (eq. 20), all-A 350.00
+    assert abs(shp.cost_single_tier(cm, "a").total - 350.00) < 1e-6
+    assert abs(shp.cost_with_migration(cm, r).total - 142.82) < 2.1
+
+
+def run(emit):
+    table1(emit)
+    table2(emit)

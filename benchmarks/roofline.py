@@ -1,0 +1,76 @@
+"""Roofline table from the dry-run artifacts (artifacts/dryrun/*.json).
+
+Per (arch × shape × mesh): the three per-chip terms, the bottleneck, the
+MODEL_FLOPS/HLO_FLOPS "useful compute" ratio, and memory fit. Also renders
+EXPERIMENTS.md-ready markdown to artifacts/roofline_table.md."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import time
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+
+
+def load_records(mesh: str = "single"):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(ART, "dryrun", f"*__{mesh}.json"))):
+        r = json.load(open(f))
+        recs.append(r)
+    return recs
+
+
+def render_markdown(recs) -> str:
+    lines = [
+        "| arch | shape | mesh | params | t_compute | t_memory | t_collective"
+        " | bottleneck | useful=6ND/HLO | arg GB/chip | tmp GB/chip |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r.get("status") == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — "
+                         f"| — | — | SKIP: {r['reason'][:40]} | — | — | — |")
+            continue
+        if r.get("status") != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+                         f"| — | — | — | — | ERROR | — | — | — |")
+            continue
+        roof = r["roofline"]
+        mem = r["memory"]
+        uf = r.get("useful_flops_ratio")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['n_params']/1e9:.1f}B "
+            f"| {roof['t_compute_s']:.2e}s | {roof['t_memory_s']:.2e}s "
+            f"| {roof['t_collective_s']:.2e}s | {roof['bottleneck']} "
+            f"| {uf if uf is None else format(uf, '.3f')} "
+            f"| {mem.get('argument_bytes', 0)/2**30:.2f} "
+            f"| {mem.get('temp_bytes', 0)/2**30:.2f} |")
+    return "\n".join(lines)
+
+
+def run(emit):
+    t0 = time.perf_counter_ns()
+    out_lines = []
+    for mesh in ("single", "multi"):
+        recs = load_records(mesh)
+        ok = [r for r in recs if r.get("status") == "ok"]
+        skip = [r for r in recs if r.get("status") == "skipped"]
+        err = [r for r in recs if r.get("status") not in ("ok", "skipped")]
+        us = (time.perf_counter_ns() - t0) / 1000.0
+        emit(f"roofline.{mesh}.cells", us,
+             f"ok={len(ok)} skipped={len(skip)} errors={len(err)}")
+        if err:
+            for r in err:
+                emit(f"roofline.{mesh}.error", us,
+                     f"{r['arch']}x{r['shape']}")
+        for r in ok:
+            roof = r["roofline"]
+            emit(f"roofline.{mesh}.{r['arch']}.{r['shape']}", us,
+                 f"bneck={roof['bottleneck']} t_bound={roof['t_bound_s']:.2e}s")
+        out_lines.append(f"### mesh: {mesh}\n\n" + render_markdown(recs))
+    path = os.path.join(ART, "roofline_table.md")
+    with open(path, "w") as f:
+        f.write("\n\n".join(out_lines) + "\n")
+    emit("roofline.table_written", 0.0, path)

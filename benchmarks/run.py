@@ -1,0 +1,43 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+import argparse
+import sys
+import traceback
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="run a single module (tables|curves|fig8|writes|"
+                         "kernels|roofline)")
+    args = ap.parse_args()
+    from benchmarks import (algo_writes, fig8_trace, fig_curves,
+                            kernels_bench, paper_tables, roofline)
+    modules = {
+        "tables": paper_tables,    # Tables I & II
+        "curves": fig_curves,      # Figures 4 & 5
+        "fig8": fig8_trace,        # Figure 8 trace validation
+        "writes": algo_writes,     # eqs. 2-8
+        "kernels": kernels_bench,  # Pallas-op microbench
+        "roofline": roofline,      # dry-run roofline table
+    }
+    failures = 0
+    print("name,us_per_call,derived")
+    for name, mod in modules.items():
+        if args.only and name != args.only:
+            continue
+        try:
+            mod.run(emit)
+        except Exception as e:
+            failures += 1
+            emit(f"{name}.FAILED", 0.0, repr(e))
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == '__main__':
+    main()

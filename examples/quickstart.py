@@ -1,0 +1,80 @@
+"""Quickstart: the paper's optimization end-to-end in 60 seconds.
+
+1. Build a two-tier cost model (Table I prices).
+2. Get the closed-form placement plan (r*, strategy) — eqs. 17/21/22.
+3. Validate it against a trace-driven simulation.
+4. Run a tiny LM train loop where the top-K most interesting examples are
+   retained across a hot/cold TieredStore under that plan.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import costs, placement, shp, simulator, tiers
+from repro.data.curation import TopKCurator
+
+
+def main():
+    # ---- 1-2: analytic plan -------------------------------------------
+    cm = costs.case_study_1()
+    plan = shp.plan_placement(cm)
+    print("== Case study 1 (AWS S3 -> Azure Blob) ==")
+    print(f"  strategy: {plan.strategy}")
+    print(f"  r*/N    : {plan.best.r_over_n:.4f} (paper: 0.41233169)")
+    print(f"  E[cost] : ${plan.best.total:.2f} (paper: 35.19)")
+    for c in plan.candidates:
+        print(f"    candidate {c.strategy:28s} ${c.total:8.2f}")
+
+    # ---- 3: trace-driven validation (paper Fig. 8) --------------------
+    n, k = 50_000, 500
+    small = cm.replace(workload=costs.WorkloadSpec(
+        n_docs=n, k=k, doc_gb=cm.workload.doc_gb,
+        window_months=cm.workload.window_months))
+    pol = placement.optimal_policy(small)
+    rng = np.random.default_rng(0)
+    sim = simulator.simulate(simulator.grn_entropy_trace(n, rng), k, pol,
+                             small, storage_bound=True)
+    analytic = shp.cost_no_migration(small, pol.r, exact=True).total
+    print("\n== Trace-driven validation ==")
+    print(f"  simulated cost ${sim.cost_total:.4f} vs analytic ${analytic:.4f}")
+    print(f"  writes A/B: {sim.writes_per_tier.tolist()}  "
+          f"evictions: {sim.evictions}")
+
+    # ---- 4: top-K curation inside a (tiny) train loop ------------------
+    print("\n== Top-K curation during training ==")
+    import jax
+    from repro import configs
+    from repro.configs.base import ShapeConfig
+    from repro.data.pipeline import StreamLoader
+    from repro.runtime import steps as steps_mod
+
+    cfg = configs.get_config("llama3.2-1b", reduced=True)
+    shape = ShapeConfig("quick", seq_len=32, global_batch=8, kind="train")
+    loader = StreamLoader(cfg, shape, seed=0)
+    kq = 16
+    total = 20 * shape.global_batch
+    store = tiers.TieredStore(placement.Policy(r=total // 2),
+                              tiers.HotTier(kq, (shape.seq_len,), dtype=jax.numpy.int32),
+                              tiers.ColdTier())
+    cur = TopKCurator(kq, store, policy=store.policy)
+    state = steps_mod.init_train_state(cfg, jax.random.PRNGKey(0),
+                                       reservoir_k=kq)
+    step_fn = jax.jit(lambda s, b: steps_mod.train_step(s, b, cfg))
+    for step in range(20):
+        batch = jax.tree.map(jax.numpy.asarray, loader.batch_for_step(step))
+        state, metrics = step_fn(state, batch)
+        cur.observe_batch(np.asarray(batch["example_ids"]),
+                          np.asarray(metrics["per_example_nll"]),
+                          np.asarray(batch["tokens"]))
+    print(f"  observed {cur.stats.observed} examples; "
+          f"writes {cur.stats.writes} "
+          f"(analytic E[writes] {cur.expected_writes():.1f})")
+    print(f"  device reservoir == host curator: "
+          f"{sorted(int(i) for i in np.asarray(state.reservoir.ids)) == sorted(cur.survivor_ids().tolist())}")
+    hard = cur.finalize()
+    print(f"  retained top-{kq} hardest examples: {sorted(hard)[:8]} ...")
+    print(f"  tier ledger: {store.ledger.as_dict()}")
+
+
+if __name__ == "__main__":
+    main()

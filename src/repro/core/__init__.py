@@ -1,0 +1,7 @@
+# The paper's primary contribution — proactive SHP-based hot/cold tier
+# placement for top-K stream workloads — plus the runtime that executes it.
+from . import costs, interestingness, placement, shp, simulator, tiers, topk  # noqa: F401
+from .costs import TierCosts, TwoTierCostModel, WorkloadSpec, case_study_1, case_study_2, hbm_host_preset  # noqa: F401
+from .placement import Policy, optimal_policy  # noqa: F401
+from .shp import PlacementPlan, plan_placement  # noqa: F401
+from .tiers import ColdTier, HotTier, TieredStore  # noqa: F401

@@ -1,0 +1,120 @@
+"""Interestingness functions (paper §IV, §VIII).
+
+The paper requires a cheap online scorer H(d) inducing a ranking; in the
+training/serving integration the natural scorers are per-example loss,
+predictive entropy (the paper's §VIII uses normalized label entropy of an
+SVM), and margin. All scorers map (logits, labels, mask) → (batch,) float32.
+
+The entropy/NLL scorers delegate to the fused Pallas kernel
+(`repro.kernels.entropy_scores`) when available, falling back to the pure-jnp
+reference — identical semantics, validated in tests.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+Scorer = Callable[..., jax.Array]
+
+
+def _masked_mean(x: jax.Array, mask: Optional[jax.Array], axis) -> jax.Array:
+    if mask is None:
+        return jnp.mean(x, axis=axis)
+    mask = mask.astype(x.dtype)
+    return jnp.sum(x * mask, axis=axis) / jnp.maximum(jnp.sum(mask, axis=axis), 1.0)
+
+
+def nll_score(logits: jax.Array, labels: jax.Array,
+              mask: Optional[jax.Array] = None, use_kernel: bool = True) -> jax.Array:
+    """Mean per-token negative log-likelihood per example.
+
+    logits: (B, S, V) — labels: (B, S) int — mask: (B, S) optional.
+    Hard examples (high loss) rank as most interesting.
+    """
+    ent, nll = _entropy_nll(logits, labels, use_kernel)
+    return _masked_mean(nll, mask, axis=-1)
+
+
+def entropy_score(logits: jax.Array, labels: Optional[jax.Array] = None,
+                  mask: Optional[jax.Array] = None, use_kernel: bool = True) -> jax.Array:
+    """Mean predictive entropy per example — the paper's §VIII scorer
+    (uncertain predictions are the interesting ones for HITL reanalysis)."""
+    if labels is None:
+        labels = jnp.zeros(logits.shape[:-1], dtype=jnp.int32)
+    ent, _ = _entropy_nll(logits, labels, use_kernel)
+    return _masked_mean(ent, mask, axis=-1)
+
+
+def margin_score(logits: jax.Array, labels: Optional[jax.Array] = None,
+                 mask: Optional[jax.Array] = None) -> jax.Array:
+    """Negative top-1/top-2 margin: small margin = uncertain = interesting."""
+    top2 = jax.lax.top_k(logits.astype(jnp.float32), 2)[0]
+    margin = top2[..., 0] - top2[..., 1]
+    return -_masked_mean(margin, mask, axis=-1)
+
+
+def random_score(key: jax.Array, batch: int) -> jax.Array:
+    """Random ranking — the control matching the classic SHP assumption."""
+    return jax.random.uniform(key, (batch,), dtype=jnp.float32)
+
+
+def _entropy_nll(logits: jax.Array, labels: jax.Array, use_kernel: bool):
+    """(entropy, nll) per position, shape = labels.shape."""
+    if use_kernel:
+        try:
+            from repro.kernels.entropy_scores import ops as _ops
+            b = logits.shape[:-1]
+            v = logits.shape[-1]
+            ent, nll = _ops.entropy_nll(logits.reshape(-1, v), labels.reshape(-1))
+            return ent.reshape(b), nll.reshape(b)
+        except Exception:
+            pass
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    logp = logits - lse[..., None]
+    p = jnp.exp(logp)
+    ent = -jnp.sum(p * logp, axis=-1)
+    nll = lse - jnp.take_along_axis(logits, labels[..., None].astype(jnp.int32),
+                                    axis=-1)[..., 0]
+    return ent, nll
+
+
+def batch_centered(scores):
+    """Subtract the batch mean: removes any per-step trend exactly, so the
+    reservoir sees a stationary rank stream (restores eq. 9/10 on training
+    NLL streams — see EXPERIMENTS §Training-integration). Loses absolute
+    difficulty levels; use ema_relative when those matter."""
+    scores = scores.astype(jnp.float32)
+    return scores - jnp.mean(scores)
+
+
+def ema_relative(scores, ema, step, decay: float = 0.9):
+    """Re-stationarize a trending score stream (beyond paper; EXPERIMENTS
+    §Training-integration finding): training NLL decreases over time, which
+    violates the random-order assumption behind eq. 9/10 and biases the
+    reservoir toward early documents. Ranking by ``score − EMA(score)``
+    removes the trend, restoring the analytic write law.
+
+    Returns (relative_scores, new_ema). ``ema`` is bias-corrected à la Adam,
+    so step 0 works from a zero init. jit-friendly.
+    """
+    scores = scores.astype(jnp.float32)
+    new_ema = decay * ema + (1.0 - decay) * jnp.mean(scores)
+    t = (step + 1).astype(jnp.float32)
+    ema_hat = new_ema / (1.0 - decay ** t)
+    return scores - ema_hat, new_ema
+
+
+SCORERS: dict[str, Scorer] = {
+    "nll": nll_score,
+    "entropy": entropy_score,
+    "margin": margin_score,
+}
+
+
+def get_scorer(name: str) -> Scorer:
+    if name not in SCORERS:
+        raise KeyError(f"unknown interestingness scorer {name!r}; have {list(SCORERS)}")
+    return SCORERS[name]

@@ -1,0 +1,60 @@
+"""Placement policies — Algorithms A/B/C of the paper as executable objects.
+
+A policy answers, per stream index, *which tier a reservoir write goes to*,
+and whether/when a bulk migration happens. Policies are produced from the
+analytic plan (`shp.plan_placement`) — the paper's proactive decision — but
+can also be constructed directly for ablations.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Optional
+
+from .costs import TwoTierCostModel
+from . import shp
+
+TIER_A, TIER_B = 0, 1
+
+
+@dataclass(frozen=True)
+class Policy:
+    """'First r to A, the rest to B', optional bulk migration at i = r.
+
+    Degenerate cases: r >= N ⇒ all-A; r <= 0 ⇒ all-B (paper eq. 22 fallback).
+    """
+
+    r: float
+    migrate_at_r: bool = False
+    name: str = "algoC"
+
+    def tier_of(self, index) -> int:
+        return TIER_A if index < self.r else TIER_B
+
+    def migration_index(self) -> Optional[int]:
+        return int(math.ceil(self.r)) if self.migrate_at_r else None
+
+
+def all_tier_a(n: int) -> Policy:
+    return Policy(r=float(n), migrate_at_r=False, name="all_a")
+
+
+def all_tier_b() -> Policy:
+    return Policy(r=0.0, migrate_at_r=False, name="all_b")
+
+
+def from_plan(plan: "shp.PlacementPlan") -> Policy:
+    s = plan.best.strategy
+    if s == "all_tier_a":
+        return all_tier_a(plan.n_docs)
+    if s == "all_tier_b":
+        return all_tier_b()
+    if s == "two_tier_no_migration":
+        return Policy(r=plan.r_no_migration, migrate_at_r=False, name="algoC_nomig")
+    return Policy(r=plan.r_migration, migrate_at_r=True, name="algoC_mig")
+
+
+def optimal_policy(cm: TwoTierCostModel, exact: bool = False) -> Policy:
+    """The paper's end-to-end decision: closed-form r*, validity gate,
+    single-tier fallbacks — all before the stream starts (proactive)."""
+    return from_plan(shp.plan_placement(cm, exact=exact))

@@ -1,0 +1,278 @@
+"""Analytic model: the Secretary Hiring Problem adapted to tiered top-K
+storage (paper §§V–VII, equations 1–22).
+
+All expectations assume documents arrive in random order with respect to
+their interestingness rank (the paper's i.u.d. assumption, validated
+trace-driven in §VIII / our ``core.simulator``).
+
+Exact forms use harmonic partial sums; ``*_approx`` forms use the paper's
+logarithmic approximations (used by the case-study tables).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Literal
+
+import numpy as np
+
+from .costs import TwoTierCostModel
+
+EULER_GAMMA = 0.5772156649015329
+
+
+# ---------------------------------------------------------------------------
+# §V — classic SHP (Algorithm A)
+# ---------------------------------------------------------------------------
+
+def classic_r_optimal(n: int) -> float:
+    """Eq. 2: observe the first N/e candidates, then take the next best."""
+    return n / math.e
+
+
+def classic_p_best() -> float:
+    """Eq. 3."""
+    return 1.0 / math.e
+
+
+def classic_expected_writes() -> float:
+    """Eq. 4: hire (write) exactly once."""
+    return 1.0
+
+
+# ---------------------------------------------------------------------------
+# §§VI–VII — write/read probabilities under simple overwrite (Algorithms B/C)
+# ---------------------------------------------------------------------------
+
+def p_write(i, k: int = 1):
+    """Eqs. 5, 9, 10: P(doc at 0-based index ``i`` is in the top-K of the
+    first i+1 docs) = min(1, K/(i+1)). Vectorized over ``i``."""
+    i = np.asarray(i, dtype=np.float64)
+    return np.minimum(1.0, k / (i + 1.0))
+
+
+def harmonic(n) -> np.ndarray:
+    """H_n for integer n >= 0 (H_0 = 0), exact via cumsum for small n,
+    asymptotic for large n."""
+    n = np.asarray(n, dtype=np.float64)
+    small = n < 1e6
+    out = np.where(
+        n > 0,
+        np.log(np.maximum(n, 1.0)) + EULER_GAMMA + 1.0 / (2.0 * np.maximum(n, 1.0))
+        - 1.0 / (12.0 * np.maximum(n, 1.0) ** 2),
+        0.0,
+    )
+    if np.any(small & (n > 0)):
+        # exact for the small regime
+        nmax = int(np.max(np.where(small, n, 0)))
+        table = np.concatenate([[0.0], np.cumsum(1.0 / np.arange(1, nmax + 1))])
+        idx = np.clip(n.astype(np.int64), 0, nmax)
+        out = np.where(small, table[idx], out)
+    return out
+
+
+def expected_cum_writes(i, k: int = 1) -> np.ndarray:
+    """Eqs. 6, 11, 12 (exact): E[# writes among docs 0..i]
+    = sum_{j<=i} min(1, K/(j+1)) = min(i+1, K) + K·(H_{i+1} − H_K)⁺."""
+    i = np.asarray(i, dtype=np.float64)
+    n_seen = i + 1.0
+    head = np.minimum(n_seen, float(k))
+    tail = k * np.maximum(harmonic(n_seen) - harmonic(float(k)), 0.0)
+    return head + tail
+
+
+def expected_cum_writes_approx(i, k: int = 1) -> np.ndarray:
+    """Eq. 12 as printed: K + K·ln((i+1)/K)  (for i+1 >= K); eq. 7 for K=1."""
+    i = np.asarray(i, dtype=np.float64)
+    n_seen = i + 1.0
+    return np.where(n_seen <= k, n_seen, k + k * np.log(n_seen / k))
+
+
+def expected_cum_writes_batched(i, k: int, batch: int) -> np.ndarray:
+    """Batched-stream generalization (beyond paper; DESIGN.md §3): when the
+    reservoir merges ``batch`` docs at once, doc i is written iff it is in
+    the top-K of the stream prefix ending at its *batch boundary*, so
+    E[# writes ≤ i] = Σ_j min(1, K / batch_end(j)). batch=1 recovers eq. 11/12.
+    """
+    i = np.asarray(i, dtype=np.int64)
+    imax = int(np.max(i))
+    j = np.arange(imax + 1, dtype=np.float64)
+    batch_end = (np.floor(j / batch) + 1.0) * batch
+    per = np.minimum(1.0, k / batch_end)
+    cum = np.cumsum(per)
+    return cum[i]
+
+
+def expected_writes_split(n: int, k: int, r: float, exact: bool = False):
+    """Expected number of reservoir writes landing in tier A (stream index
+    < r) vs tier B (index >= r), Algorithm C.
+
+    Approx (paper): writes_A = K(1 + ln(r/K)), writes_B = K·ln(N/r).
+    """
+    r = float(min(max(r, 1.0), n))
+    if exact:
+        wa = float(expected_cum_writes(r - 1.0, k))
+        wtot = float(expected_cum_writes(n - 1.0, k))
+        return wa, wtot - wa
+    if r <= k:
+        wa = r
+        wb = (k - r) + k * math.log(n / k) if k < n else 0.0
+        # below-K regime: first K docs always write
+        wb = (k - r) + k * (math.log(n) - math.log(k))
+        return wa, wb
+    wa = k * (1.0 + math.log(r / k))
+    wb = k * (math.log(n) - math.log(r))
+    return wa, wb
+
+
+# ---------------------------------------------------------------------------
+# §VII — expected costs of the two strategies and closed-form r*
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class StrategyCost:
+    strategy: str
+    r_over_n: float
+    total: float
+    writes_a: float
+    writes_b: float
+    reads: float
+    storage: float
+    migration: float
+
+    def breakdown(self) -> dict:
+        return {
+            "strategy": self.strategy, "r_over_n": self.r_over_n,
+            "total": self.total, "writes_a": self.writes_a,
+            "writes_b": self.writes_b, "reads": self.reads,
+            "storage": self.storage, "migration": self.migration,
+        }
+
+
+def cost_no_migration(cm: TwoTierCostModel, r: float, exact: bool = False) -> StrategyCost:
+    """Eqs. 13–16 + most-expensive-tier rental upper bound (DESIGN §1.1)."""
+    wl = cm.workload
+    n, k = wl.n_docs, wl.k
+    r = float(np.clip(r, 1.0, n))
+    wa, wb = expected_writes_split(n, k, r, exact=exact)
+    writes_a, writes_b = wa * cm.cw_a, wb * cm.cw_b
+    rn = r / n
+    # eq. 15 (sign-consistent form): survivors are i.u.d. over the stream,
+    # those with index < r live in A.
+    reads = wl.reads_per_window * k * (rn * cm.cr_a + (1.0 - rn) * cm.cr_b)
+    storage = k * cm.cs_max  # bound, constant in r
+    total = writes_a + writes_b + reads + storage
+    return StrategyCost("two_tier_no_migration", rn, total, writes_a, writes_b,
+                        reads, storage, 0.0)
+
+
+def cost_with_migration(cm: TwoTierCostModel, r: float, exact: bool = False) -> StrategyCost:
+    """Eqs. 18–20: all docs migrate A→B at i=r; rental splits r/N; the final
+    read is from B only and is *not* part of eq. 20 (paper convention)."""
+    wl = cm.workload
+    n, k = wl.n_docs, wl.k
+    r = float(np.clip(r, 1.0, n))
+    wa, wb = expected_writes_split(n, k, r, exact=exact)
+    writes_a, writes_b = wa * cm.cw_a, wb * cm.cw_b
+    rn = r / n
+    storage = k * (rn * cm.cs_a + (1.0 - rn) * cm.cs_b)  # eq. 18
+    migration = k * cm.migration_per_doc  # eq. 19, constant in r
+    total = writes_a + writes_b + storage + migration  # eq. 20
+    return StrategyCost("two_tier_migration", rn, total, writes_a, writes_b,
+                        0.0, storage, migration)
+
+
+def cost_single_tier(cm: TwoTierCostModel, tier: Literal["a", "b"],
+                     exact: bool = False) -> StrategyCost:
+    wl = cm.workload
+    n, k = wl.n_docs, wl.k
+    if exact:
+        w = float(expected_cum_writes(n - 1.0, k))
+    else:
+        w = k * (1.0 + math.log(n / k))
+    if tier == "a":
+        writes, reads, storage = w * cm.cw_a, wl.reads_per_window * k * cm.cr_a, k * cm.cs_a
+        return StrategyCost("all_tier_a", 1.0, writes + reads + storage,
+                            writes, 0.0, reads, storage, 0.0)
+    writes, reads, storage = w * cm.cw_b, wl.reads_per_window * k * cm.cr_b, k * cm.cs_b
+    return StrategyCost("all_tier_b", 0.0, writes + reads + storage,
+                        0.0, writes, reads, storage, 0.0)
+
+
+def r_optimal_no_migration(cm: TwoTierCostModel) -> float:
+    """Eq. 17: r*/N = (cw_A − cw_B) / (cr_B − cr_A). Returns r (not r/N);
+    NaN if the denominator vanishes."""
+    num = cm.cw_a - cm.cw_b
+    den = (cm.cr_b - cm.cr_a) * cm.workload.reads_per_window
+    if den == 0.0:
+        return float("nan")
+    return (num / den) * cm.workload.n_docs
+
+
+def r_optimal_migration(cm: TwoTierCostModel) -> float:
+    """Eq. 21: r*/N = (cw_A − cw_B) / (cs_B − cs_A)."""
+    num = cm.cw_a - cm.cw_b
+    den = cm.cs_b - cm.cs_a
+    if den == 0.0:
+        return float("nan")
+    return (num / den) * cm.workload.n_docs
+
+
+def r_is_valid(cm: TwoTierCostModel, r: float) -> bool:
+    """Eq. 22: K < r* < N — plus the second-order condition the paper leaves
+    implicit: d²E/dr² = −K(cw_A − cw_B)/r² > 0 requires cw_A < cw_B (tier A
+    must be the write-cheap tier, else the stationary point is a *maximum*)."""
+    return (math.isfinite(r) and cm.workload.k < r < cm.workload.n_docs
+            and cm.cw_a < cm.cw_b)
+
+
+@dataclass(frozen=True)
+class PlacementPlan:
+    """Outcome of the paper's decision procedure: the minimum-expected-cost
+    strategy among {two-tier no-mig @ r*, two-tier mig @ r*, all-A, all-B}."""
+
+    best: StrategyCost
+    candidates: tuple
+    r_no_migration: float
+    r_migration: float
+    n_docs: int
+
+    @property
+    def strategy(self) -> str:
+        return self.best.strategy
+
+    @property
+    def r(self) -> float:
+        """Absolute changeover index of the chosen strategy (N for all-A,
+        0 for all-B)."""
+        return self.best.r_over_n * self.n_docs
+
+    @property
+    def migrate(self) -> bool:
+        return self.best.strategy == "two_tier_migration"
+
+
+def plan_placement(cm: TwoTierCostModel, exact: bool = False) -> PlacementPlan:
+    """Evaluate every strategy (respecting the eq. 22 validity gate) and pick
+    the cheapest — this is the proactive decision made before the stream."""
+    cands = [cost_single_tier(cm, "a", exact), cost_single_tier(cm, "b", exact)]
+    r_nm = r_optimal_no_migration(cm)
+    r_mg = r_optimal_migration(cm)
+    if r_is_valid(cm, r_nm):
+        cands.append(cost_no_migration(cm, r_nm, exact))
+    if r_is_valid(cm, r_mg):
+        cands.append(cost_with_migration(cm, r_mg, exact))
+    best = min(cands, key=lambda s: s.total)
+    return PlacementPlan(best=best, candidates=tuple(cands),
+                         r_no_migration=r_nm, r_migration=r_mg,
+                         n_docs=cm.workload.n_docs)
+
+
+def cost_curve(cm: TwoTierCostModel, migrate: bool, num: int = 512) -> np.ndarray:
+    """Expected total cost for r swept over (K, N) — Figures 4 & 5.
+    Returns array (num, 2) of [r/N, cost]."""
+    wl = cm.workload
+    rs = np.linspace(max(wl.k + 1, 1), wl.n_docs - 1, num)
+    fn = cost_with_migration if migrate else cost_no_migration
+    out = np.array([[r / wl.n_docs, fn(cm, float(r)).total] for r in rs])
+    return out

@@ -1,0 +1,192 @@
+"""TieredStore — the runtime that actually holds top-K payloads across a
+hot (device HBM) / cold (host DRAM or disk) hierarchy, placing each write
+according to a `placement.Policy` (the paper's Fig. 3 loop, §VII).
+
+The ledger records every transaction and byte so real runs can be reconciled
+against the analytic expectations (and against `core.simulator`).
+"""
+from __future__ import annotations
+
+import os
+import pickle
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .placement import Policy, TIER_A, TIER_B
+
+
+@dataclass
+class Ledger:
+    writes: np.ndarray = field(default_factory=lambda: np.zeros(2, np.int64))
+    reads: np.ndarray = field(default_factory=lambda: np.zeros(2, np.int64))
+    deletes: np.ndarray = field(default_factory=lambda: np.zeros(2, np.int64))
+    migrations: int = 0
+    bytes_written: np.ndarray = field(default_factory=lambda: np.zeros(2, np.int64))
+    bytes_read: np.ndarray = field(default_factory=lambda: np.zeros(2, np.int64))
+
+    def as_dict(self) -> dict:
+        return {
+            "writes": self.writes.tolist(), "reads": self.reads.tolist(),
+            "deletes": self.deletes.tolist(), "migrations": self.migrations,
+            "bytes_written": self.bytes_written.tolist(),
+            "bytes_read": self.bytes_read.tolist(),
+        }
+
+
+class HotTier:
+    """Device-resident slab: K preallocated slots of a fixed payload shape.
+    Slot bookkeeping is host-side; payload bytes stay on device."""
+
+    def __init__(self, k: int, payload_shape, dtype=jnp.float32, device=None):
+        self.k = k
+        self._buf = jnp.zeros((k,) + tuple(payload_shape), dtype=dtype)
+        if device is not None:
+            self._buf = jax.device_put(self._buf, device)
+        self._slot_of: Dict[int, int] = {}
+        self._free = list(range(k))
+
+    def put(self, doc_id: int, payload) -> int:
+        if doc_id in self._slot_of:
+            slot = self._slot_of[doc_id]
+        else:
+            if not self._free:
+                raise RuntimeError("hot tier full — evict before writing")
+            slot = self._free.pop()
+            self._slot_of[doc_id] = slot
+        self._buf = self._buf.at[slot].set(payload)
+        return payload_nbytes(payload)
+
+    def get(self, doc_id: int):
+        return self._buf[self._slot_of[doc_id]]
+
+    def delete(self, doc_id: int) -> None:
+        self._free.append(self._slot_of.pop(doc_id))
+
+    def __contains__(self, doc_id: int) -> bool:
+        return doc_id in self._slot_of
+
+    def doc_ids(self):
+        return list(self._slot_of)
+
+
+class ColdTier:
+    """Host-resident store: numpy copies keyed by doc id, optionally spilled
+    to a directory (object-store stand-in)."""
+
+    def __init__(self, directory: Optional[str] = None):
+        self._mem: Dict[int, np.ndarray] = {}
+        self._dir = directory
+        if directory:
+            os.makedirs(directory, exist_ok=True)
+
+    def _path(self, doc_id: int) -> str:
+        return os.path.join(self._dir, f"doc_{doc_id}.npy")
+
+    def put(self, doc_id: int, payload) -> int:
+        arr = np.asarray(jax.device_get(payload))
+        if self._dir:
+            np.save(self._path(doc_id), arr)
+        else:
+            self._mem[doc_id] = arr
+        return arr.nbytes
+
+    def get(self, doc_id: int):
+        if self._dir:
+            return np.load(self._path(doc_id))
+        return self._mem[doc_id]
+
+    def delete(self, doc_id: int) -> None:
+        if self._dir:
+            os.remove(self._path(doc_id))
+        else:
+            del self._mem[doc_id]
+
+    def __contains__(self, doc_id: int) -> bool:
+        if self._dir:
+            return os.path.exists(self._path(doc_id))
+        return doc_id in self._mem
+
+    def doc_ids(self):
+        if self._dir:
+            return [int(f[4:-4]) for f in os.listdir(self._dir)
+                    if f.startswith("doc_") and f.endswith(".npy")]
+        return list(self._mem)
+
+
+def payload_nbytes(payload) -> int:
+    return int(np.prod(payload.shape)) * payload.dtype.itemsize
+
+
+class TieredStore:
+    """Two-tier payload store driven by an SHP placement policy.
+
+    Usage (inside the consumer-side of a train/serve loop):
+        store.write(doc_id, payload)          # tier chosen by policy(doc_id)
+        store.evict(doc_id)                   # reservoir overwrote the doc
+        store.maybe_migrate(stream_index)     # bulk A→B at i = r (Fig. 3)
+        payloads = store.read_all(ids)        # the final top-K read
+    """
+
+    def __init__(self, policy: Policy, hot: HotTier, cold: ColdTier):
+        self.policy = policy
+        self.tiers = {TIER_A: hot, TIER_B: cold}
+        self.ledger = Ledger()
+        self._migrated = False
+
+    def tier_index_of(self, doc_id: int) -> Optional[int]:
+        for t, tier in self.tiers.items():
+            if doc_id in tier:
+                return t
+        return None
+
+    def write(self, doc_id: int, payload) -> int:
+        t = self.policy.tier_of(doc_id)
+        if self._migrated:
+            t = TIER_B
+        nbytes = self.tiers[t].put(doc_id, payload)
+        self.ledger.writes[t] += 1
+        self.ledger.bytes_written[t] += nbytes
+        return t
+
+    def evict(self, doc_id: int) -> None:
+        t = self.tier_index_of(doc_id)
+        if t is None:
+            return
+        self.tiers[t].delete(doc_id)
+        self.ledger.deletes[t] += 1
+
+    def maybe_migrate(self, stream_index: int) -> int:
+        mig_at = self.policy.migration_index()
+        if self._migrated or mig_at is None or stream_index < mig_at:
+            return 0
+        moved = 0
+        hot = self.tiers[TIER_A]
+        for doc_id in hot.doc_ids():
+            payload = hot.get(doc_id)
+            self.ledger.reads[TIER_A] += 1
+            self.ledger.bytes_read[TIER_A] += payload_nbytes(payload)
+            nbytes = self.tiers[TIER_B].put(doc_id, payload)
+            self.ledger.writes[TIER_B] += 1
+            self.ledger.bytes_written[TIER_B] += nbytes
+            hot.delete(doc_id)
+            moved += 1
+        self.ledger.migrations += moved
+        self._migrated = True
+        return moved
+
+    def read(self, doc_id: int):
+        t = self.tier_index_of(doc_id)
+        if t is None:
+            raise KeyError(f"doc {doc_id} not stored")
+        payload = self.tiers[t].get(doc_id)
+        self.ledger.reads[t] += 1
+        self.ledger.bytes_read[t] += payload_nbytes(payload)
+        return payload
+
+    def read_all(self, doc_ids):
+        return {int(d): self.read(int(d)) for d in doc_ids}

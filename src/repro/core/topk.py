@@ -1,0 +1,88 @@
+"""Streaming top-K reservoir — jit-compatible, batched, shard-mergeable.
+
+The paper's per-document ``H.insert / indexof`` loop (Fig. 2/3), vectorized
+for accelerators: each update merges a batch of scored documents into the
+reservoir with one sort. Deterministic tie-break: lower stream index wins.
+
+State is a pytree, so it can live donated inside a jitted train step and be
+sharded/merged across data-parallel sub-streams (``merge``).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = jnp.float32(-jnp.inf)
+
+
+class ReservoirState(NamedTuple):
+    scores: jax.Array  # (K,) float32, sorted descending, -inf padded
+    ids: jax.Array  # (K,) int32 global stream index, -1 padded
+    seen: jax.Array  # () int32 — total documents observed
+
+
+def init(k: int) -> ReservoirState:
+    return ReservoirState(
+        scores=jnp.full((k,), -jnp.inf, dtype=jnp.float32),
+        ids=jnp.full((k,), -1, dtype=jnp.int32),
+        seen=jnp.zeros((), dtype=jnp.int32),
+    )
+
+
+def _merge_sorted(scores: jax.Array, ids: jax.Array, k: int):
+    """Top-k of (scores, ids) with lower-id tie-break; returns sorted desc."""
+    # lexsort: primary = -score, secondary = id  → stable deterministic order.
+    order = jnp.lexsort((ids, -scores))
+    top = order[:k]
+    return scores[top], ids[top]
+
+
+def update(state: ReservoirState, batch_scores: jax.Array,
+           batch_ids: jax.Array) -> Tuple[ReservoirState, jax.Array]:
+    """Merge a batch into the reservoir.
+
+    Returns (new_state, wrote_mask) where ``wrote_mask[j]`` is True iff batch
+    element j entered the reservoir (⇒ one storage write, paper eq. 9/10).
+    """
+    k = state.scores.shape[0]
+    batch_scores = batch_scores.astype(jnp.float32).reshape(-1)
+    batch_ids = batch_ids.astype(jnp.int32).reshape(-1)
+    all_scores = jnp.concatenate([state.scores, batch_scores])
+    all_ids = jnp.concatenate([state.ids, batch_ids])
+    new_scores, new_ids = _merge_sorted(all_scores, all_ids, k)
+    # membership: ids are unique (stream indices), -1 padding never matches
+    wrote = jnp.isin(batch_ids, new_ids, assume_unique=False)
+    new_state = ReservoirState(
+        scores=new_scores, ids=new_ids,
+        seen=state.seen + batch_ids.shape[0],
+    )
+    return new_state, wrote
+
+
+def evicted(old: ReservoirState, new: ReservoirState) -> jax.Array:
+    """Mask over ``old.ids`` of entries no longer present in ``new`` —
+    the documents whose storage can be freed (overwritten, paper §VI)."""
+    return (old.ids >= 0) & ~jnp.isin(old.ids, new.ids)
+
+
+def merge(a: ReservoirState, b: ReservoirState) -> ReservoirState:
+    """Merge two sub-stream reservoirs (cross-shard reduction). Associative
+    and commutative up to the deterministic tie-break, so it can be used in
+    ``jax.lax`` reductions / psum-style tree merges."""
+    k = a.scores.shape[0]
+    scores = jnp.concatenate([a.scores, b.scores])
+    ids = jnp.concatenate([a.ids, b.ids])
+    s, i = _merge_sorted(scores, ids, k)
+    return ReservoirState(scores=s, ids=i, seen=a.seen + b.seen)
+
+
+def threshold(state: ReservoirState) -> jax.Array:
+    """Current K-th score (entry bar). -inf while the reservoir is unfull."""
+    return state.scores[-1]
+
+
+def tier_of(ids: jax.Array, r: float | jax.Array) -> jax.Array:
+    """Algorithm C placement: tier 0 (A) for stream index < r, else 1 (B)."""
+    return (ids >= jnp.asarray(r)).astype(jnp.int32)

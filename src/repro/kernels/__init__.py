@@ -1,0 +1,8 @@
+# Compute hot-spots of the paper's pipeline, as Pallas TPU kernels
+# (pl.pallas_call + BlockSpec VMEM tiling), validated in interpret mode on
+# CPU against the ref.py oracles:
+#   entropy_scores — fused interestingness scoring (entropy+NLL over vocab tiles)
+#   topk_filter    — streaming reservoir threshold scan (Fig. 2/3 inner loop)
+#   flash_attention — fused attention (removes the S² HBM score traffic
+#                     identified as the dominant train-cell roofline term)
+from . import entropy_scores, flash_attention, topk_filter  # noqa: F401

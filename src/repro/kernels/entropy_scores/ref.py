@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the fused entropy+NLL interestingness kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def entropy_nll(logits: jax.Array, labels: jax.Array):
+    """logits: (B, V) — labels: (B,) int32.
+
+    Returns (entropy (B,), nll (B,)) in fp32:
+      entropy = −Σ p·log p  with p = softmax(logits)
+      nll     = logsumexp(logits) − logits[label]
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    logp = logits - lse[:, None]
+    p = jnp.exp(logp)
+    ent = -jnp.sum(p * logp, axis=-1)
+    nll = lse - jnp.take_along_axis(logits, labels[:, None].astype(jnp.int32),
+                                    axis=-1)[:, 0]
+    return ent, nll

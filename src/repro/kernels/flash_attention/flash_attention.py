@@ -1,0 +1,103 @@
+"""Pallas TPU flash attention (forward): online-softmax over KV tiles held
+in VMEM — the fused kernel that removes the S² score traffic identified as
+the dominant residual HBM term in the train-cell rooflines (EXPERIMENTS
+§Perf cell 3: ~7e12 bytes/chip of f32 score tensors per step).
+
+Dataflow per (batch, head, q-tile) grid cell: stream KV tiles through VMEM,
+carry (m, l, acc) in f32 scratch, write one (block_q, hd) output tile.
+Causal + sliding-window masking via broadcasted iotas (no mask tensor in
+HBM). MXU alignment: block sizes default to 128 multiples.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -2.0e9
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s, *,
+            scale: float, causal: bool, window: int, block_q: int,
+            block_k: int, n_k: int, sq: int, skv: int):
+    kj = pl.program_id(3)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale  # (block_q, hd)
+    k = k_ref[0, 0].astype(jnp.float32)  # (block_k, hd)
+    logits = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (bq, bk)
+
+    qi = pl.program_id(2)
+    qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 0) \
+        + (skv - sq)
+    kpos = kj * block_k + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+    ok = kpos < skv  # tail padding
+    if causal:
+        ok &= kpos <= qpos
+    if window > 0:
+        ok &= kpos > qpos - window
+    logits = jnp.where(ok, logits, NEG)
+
+    m_prev = m_s[...]
+    m_new = jnp.maximum(m_prev, logits.max(axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(logits - m_new[:, None])
+    l_s[...] = l_s[...] * alpha + p.sum(axis=1)
+    m_s[...] = m_new
+    acc_s[...] = acc_s[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v_ref[0, 0].astype(jnp.float32), (((1,), (0,)), ((), ())))
+
+    @pl.when(kj == n_k - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_s[...] / jnp.maximum(l_s[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal: bool = True, window: int = 0,
+                           scale: float | None = None, block_q: int = 128,
+                           block_k: int = 128, interpret: bool = False):
+    """q: (B,Sq,H,hd) — k,v: (B,Skv,H,hd). Sq % block_q == 0 and
+    Skv % block_k == 0 (ops.py pads). Returns (B,Sq,H,hd)."""
+    b, sq, h, hd = q.shape
+    skv = k.shape[1]
+    assert sq % block_q == 0 and skv % block_k == 0
+    scale = scale or 1.0 / (hd ** 0.5)
+    n_q = sq // block_q
+    n_k = skv // block_k
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window, block_q=block_q,
+        block_k=block_k, n_k=n_k, sq=sq, skv=skv)
+    # layout: (B, H, S, hd) tiles; grid (B, H, n_q, n_k) with kv innermost
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, h, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd),
+                         lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda bi, hi, qi, ki: (bi, hi, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda bi, hi, qi, ki: (bi, hi, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd),
+                               lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the flash-attention kernel: masked softmax attention
+with optional causality and sliding window, fp32 accumulation."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    scale: float | None = None):
+    """q: (B,Sq,H,hd) — k,v: (B,Skv,H,hd) — positions are implicit
+    (q row i has position i + (Skv − Sq), keys 0..Skv−1)."""
+    b, sq, h, hd = q.shape
+    skv = k.shape[1]
+    scale = scale or 1.0 / (hd ** 0.5)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(sq) + (skv - sq)
+    kpos = jnp.arange(skv)
+    ok = jnp.ones((sq, skv), bool)
+    if causal:
+        ok &= kpos[None, :] <= qpos[:, None]
+    if window > 0:
+        ok &= kpos[None, :] > qpos[:, None] - window
+    logits = jnp.where(ok[None, None], logits, -2.0e9)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the top-K threshold filter kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def topk_filter(scores, threshold, block_n: int):
+    scores = scores.astype(jnp.float32)
+    n = scores.shape[0]
+    n_tiles = n // block_n
+    mask = (scores > threshold).astype(jnp.int8)
+    tiles = scores.reshape(n_tiles, block_n)
+    counts = (tiles > threshold).sum(axis=1).astype(jnp.int32)
+    tmax = tiles.max(axis=1)
+    return mask, counts, tmax

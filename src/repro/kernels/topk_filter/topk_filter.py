@@ -1,0 +1,57 @@
+"""Pallas TPU kernel: streaming threshold filter for top-K maintenance.
+
+The paper's Fig. 2/3 inner loop ranks every arriving document against the
+reservoir. At accelerator scale the hot part is scanning a large score
+vector against the current K-th score (the reservoir "bar"): almost all
+candidates fail, the rare survivors go through the exact (tiny) merge in
+``core.topk``. This kernel is that scan — one pass over HBM, tiled through
+VMEM, emitting the survivor mask plus per-tile counts and maxima (the
+maxima let the host skip entire tiles on the next refinement pass).
+
+Grid: (N/bn,) — embarrassingly parallel, bandwidth-bound.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(scores_ref, thr_ref, mask_ref, count_ref, tmax_ref):
+    s = scores_ref[...].astype(jnp.float32)  # (bn,)
+    thr = thr_ref[0]
+    hit = s > thr
+    mask_ref[...] = hit.astype(jnp.int8)
+    count_ref[0] = hit.sum().astype(jnp.int32)
+    tmax_ref[0] = s.max()
+
+
+def topk_filter_pallas(scores, threshold, *, block_n: int = 4096,
+                       interpret: bool = False):
+    """scores: (N,) float — threshold: () float32.
+    Returns (mask (N,) int8, counts (N/bn,) int32, tile_max (N/bn,) f32)."""
+    n = scores.shape[0]
+    assert n % block_n == 0, (n, block_n)
+    n_tiles = n // block_n
+    thr = jnp.reshape(threshold.astype(jnp.float32), (1,))
+    return pl.pallas_call(
+        _kernel,
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=(
+            jax.ShapeDtypeStruct((n,), jnp.int8),
+            jax.ShapeDtypeStruct((n_tiles,), jnp.int32),
+            jax.ShapeDtypeStruct((n_tiles,), jnp.float32),
+        ),
+        interpret=interpret,
+    )(scores, thr)

@@ -1,0 +1,240 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × input-shape × mesh) cell
+with abstract params/optimizer/cache and explicit NamedShardings, then record
+memory_analysis(), cost_analysis() and collective traffic for the roofline.
+
+The two lines above MUST run before any jax import (jax locks the device
+count at first init) — this module is the only place the 512 placeholder
+devices exist; smoke tests and benchmarks see the real single CPU device.
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-9b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all [--mesh both] [--out artifacts/dryrun]
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.configs.base import supports_shape
+from repro.launch import hlo_analysis, specs
+from repro.launch.mesh import make_production_mesh
+from repro.models import lm, param_count
+from repro.parallel import ctx as pctx
+from repro.parallel import sharding as shd
+from repro.runtime import steps
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def _rep(mesh, tree):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+def train_state_shardings(mesh, state_spec: steps.TrainState):
+    ps = shd.param_shardings(mesh, state_spec.params)
+    ms = shd.param_shardings(mesh, state_spec.opt.m)
+    vs = shd.param_shardings(mesh, state_spec.opt.v)
+    opt = type(state_spec.opt)(step=NamedSharding(mesh, P()), m=ms, v=vs)
+    return steps.TrainState(params=ps, opt=opt,
+                            step=NamedSharding(mesh, P()),
+                            reservoir=_rep(mesh, state_spec.reservoir),
+                            score_ema=NamedSharding(mesh, P()))
+
+
+def build_cell(cfg, shape, mesh):
+    """Returns (fn, example_args, in_shardings, out_shardings)."""
+    n_chips = mesh.devices.size
+    if shape.kind == "train":
+        state_spec = specs.train_state_spec(cfg)
+        batch_spec = specs.batch_specs(cfg, shape)
+        st_sh = train_state_shardings(mesh, state_spec)
+        b_sh = shd.batch_shardings(mesh, batch_spec)
+
+        # big models microbatch so the remat-saved stack fits HBM (§Perf).
+        # µ=16 was tried for the 200B+ MoE trains and REFUTED: FSDP expert
+        # weight re-gathers scale with µ and dominated (EXPERIMENTS §Perf).
+        micro = 8 if param_count(cfg) > 5e10 else 1
+
+        def fn(state, batch):
+            new_state, metrics = steps.train_step(state, batch, cfg,
+                                                  microbatches=micro)
+            small = {k: v for k, v in metrics.items()
+                     if k in ("loss", "aux_loss", "grad_norm",
+                              "reservoir_writes")}
+            return new_state, small
+
+        out_sh = (st_sh, _rep(mesh, {"loss": 0, "aux_loss": 0, "grad_norm": 0,
+                                     "reservoir_writes": 0}))
+        return fn, (state_spec, batch_spec), (st_sh, b_sh), out_sh
+
+    params_spec = lm.abstract_params(cfg)
+    p_sh = shd.param_shardings(mesh, params_spec)
+    if shape.kind == "prefill":
+        batch_spec = specs.batch_specs(cfg, shape)
+        b_sh = shd.batch_shardings(mesh, batch_spec)
+        kv = specs.cache_len(
+            cfg, (cfg.decoder_len + 1) if cfg.is_encoder_decoder else shape.seq_len)
+        enc_len = shape.seq_len if cfg.is_encoder_decoder else 0
+        cache_spec = jax.eval_shape(
+            lambda: lm.init_cache(cfg, shape.global_batch, kv, enc_len=enc_len))
+        c_sh = shd.cache_shardings(mesh, cache_spec)
+
+        def fn(params, batch, cache):
+            return steps.prefill_step(params, batch, cache, cfg)
+
+        logits_sh = NamedSharding(mesh, pctx.spec(
+            mesh, (pctx.BATCH, pctx.MODEL), (shape.global_batch, cfg.vocab_size)))
+        return fn, (params_spec, batch_spec, cache_spec), \
+            (p_sh, b_sh, c_sh), (logits_sh, c_sh)
+
+    # decode — weights TP/EP-only (no FSDP) when they fit one model-axis
+    # shard (≲20B params): a per-token weight all-gather has nothing to
+    # amortize it. Bigger models keep FSDP (weights wouldn't fit HBM). §Perf
+    if param_count(cfg) < 2e10:
+        p_sh = shd.param_shardings(mesh, params_spec, fsdp=False)
+    tok_spec, cache_spec = specs.decode_inputs(cfg, shape)
+    c_sh = shd.cache_shardings(mesh, cache_spec)
+    t_sh = NamedSharding(mesh, pctx.spec(mesh, (pctx.BATCH,), tok_spec.shape))
+
+    def fn(params, token, cache):
+        return steps.decode_step(params, token, cache, cfg)
+
+    logits_sh = NamedSharding(mesh, pctx.spec(
+        mesh, (pctx.BATCH, pctx.MODEL), (shape.global_batch, cfg.vocab_size)))
+    return fn, (params_spec, tok_spec, cache_spec), \
+        (p_sh, t_sh, c_sh), (logits_sh, c_sh)
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
+             verbose: bool = True) -> dict:
+    cfg = configs.get_config(arch).with_dtypes("bfloat16", "bfloat16")
+    shape = configs.get_shape(shape_name)
+    # sequence parallelism pays off when many tokens flow per step — but on
+    # the multi-pod mesh the SP layout collides with the MoE dispatch
+    # reshape (SPMD "involuntary full remat"), measured 10-50× worse; SP is
+    # therefore scoped to dense/SSM archs there (EXPERIMENTS §Perf it. 4)
+    use_sp = shape.kind in ("train", "prefill") and \
+        (cfg.n_experts == 0 or mesh_kind == "single")
+    cfg = cfg.replace(remat=True, seq_parallel=use_sp)
+    ok, why = supports_shape(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind}
+    if not ok:
+        rec["status"] = "skipped"
+        rec["reason"] = why
+        return rec
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = int(mesh.devices.size)
+    t0 = time.time()
+    with pctx.use_mesh(mesh), mesh:
+        fn, args, in_sh, out_sh = build_cell(cfg, shape, mesh)
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                         donate_argnums=(0,) if shape.is_train else ())
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    mem = compiled.memory_analysis()
+    roof = hlo_analysis.roofline_from_compiled(compiled, n_chips)
+    n_params = param_count(cfg)
+    mf = hlo_analysis.model_flops(cfg, shape, active_param_count(cfg))
+    rec.update({
+        "status": "ok",
+        "n_chips": n_chips,
+        "n_params": n_params,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": _mem_dict(mem),
+        "roofline": roof.as_dict(),
+        "model_flops": mf,
+        "useful_flops_ratio": (mf / n_chips / roof.flops) if roof.flops else None,
+    })
+    if verbose:
+        print(f"[{arch} × {shape_name} × {mesh_kind}] compiled in "
+              f"{t_compile:.0f}s  chips={n_chips}")
+        print("  memory_analysis:", rec["memory"])
+        print("  per-chip: flops={:.3e} bytes={:.3e} link_bytes={:.3e}".format(
+            roof.flops, roof.hbm_bytes, roof.collective_link_bytes))
+        print("  roofline: t_comp={:.2e}s t_mem={:.2e}s t_coll={:.2e}s -> {}".format(
+            roof.t_compute, roof.t_memory, roof.t_collective, roof.bottleneck))
+    return rec
+
+
+def active_param_count(cfg) -> int:
+    """Active params per token (MoE counts shared + top-k routed only)."""
+    total = param_count(cfg)
+    if cfg.n_experts == 0:
+        return total
+    # subtract inactive expert weights
+    glu = 3  # w_up, w_gate, w_down
+    per_expert = glu * cfg.d_model * cfg.d_ff_expert
+    n_moe_layers = sum(s.count for s in cfg.layers if s.ffn == "moe")
+    inactive = n_moe_layers * (cfg.n_experts - cfg.top_k_experts) * per_expert
+    return total - inactive
+
+
+def _mem_dict(mem) -> dict:
+    try:
+        return {
+            "argument_bytes": int(mem.argument_size_in_bytes),
+            "output_bytes": int(mem.output_size_in_bytes),
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            "generated_code_bytes": int(mem.generated_code_size_in_bytes),
+        }
+    except Exception:
+        return {"repr": str(mem)}
+
+
+def cells(mesh_kind: str, only_arch=None, only_shape=None):
+    for arch in configs.list_archs():
+        if only_arch and arch != only_arch:
+            continue
+        for shape_name in configs.SHAPES:
+            if only_shape and shape_name != only_shape:
+                continue
+            yield arch, shape_name, mesh_kind
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    mesh_kinds = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    n_fail = 0
+    for mk in mesh_kinds:
+        for arch, shape_name, mesh_kind in cells(mk, args.arch, args.shape):
+            if not args.all and (args.arch is None or args.shape is None):
+                continue
+            path = os.path.join(
+                args.out, f"{arch}__{shape_name}__{mesh_kind}.json")
+            if args.skip_existing and os.path.exists(path):
+                with open(path) as f:
+                    if json.load(f).get("status") in ("ok", "skipped"):
+                        continue
+            try:
+                rec = run_cell(arch, shape_name, mesh_kind, args.out)
+            except Exception as e:  # record and continue
+                rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                       "status": "error", "error": repr(e),
+                       "traceback": traceback.format_exc()[-4000:]}
+                n_fail += 1
+                print(f"[{arch} × {shape_name} × {mesh_kind}] FAILED: {e!r}")
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+    print(f"dry-run done; failures={n_fail}")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

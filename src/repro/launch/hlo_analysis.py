@@ -1,0 +1,168 @@
+"""Post-compile HLO analysis: collective-traffic accounting + roofline terms.
+
+``cost_analysis()`` has FLOPs and HBM bytes but no collective traffic, so we
+parse the compiled HLO text and sum the output sizes of every collective op,
+then convert to per-chip link-bytes with ring-algorithm factors.
+
+TPU v5e constants (per chip): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI (per the assignment).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+PEAK_FLOPS = 197e12  # bf16, per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.:  %all-reduce.5 = bf16[16,512]{1,0} all-reduce(...)
+#        ROOT %tuple ... (f32[8,16]{...}, bf16[...]) all-gather(...)
+_INSTR_RE = re.compile(
+    r"=\s*(?:\()?([a-z0-9]+)\[([0-9,]*)\][^ ]*\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+)
+_TUPLE_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: dict = field(default_factory=dict)
+    count_by_kind: dict = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    def link_bytes_per_chip(self, n_chips: int) -> float:
+        """Ring-model per-chip link traffic:
+        all-reduce ≈ 2·(n−1)/n · S;  all-gather / reduce-scatter / all-to-all
+        / permute ≈ (n−1)/n · S (S = global tensor size).  We use the op's
+        *output* size as S and n = total chips (upper bound on the ring)."""
+        f = (n_chips - 1) / max(n_chips, 1)
+        factors = {"all-reduce": 2.0 * f, "all-gather": f,
+                   "reduce-scatter": f, "all-to-all": f,
+                   "collective-permute": 1.0}
+        return sum(self.bytes_by_kind.get(k, 0) * factors.get(k, 1.0)
+                   for k in self.bytes_by_kind) / max(n_chips, 1)
+
+    def as_dict(self) -> dict:
+        return {"bytes_by_kind": dict(self.bytes_by_kind),
+                "count_by_kind": dict(self.count_by_kind),
+                "total_bytes": self.total_bytes}
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    st = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(3)
+        if "(" in line.split("=", 1)[0]:
+            pass
+        # tuple outputs: sum every shape in the tuple before the op name
+        lhs = line.split(kind)[0]
+        if "= (" in lhs.replace("=  (", "= ("):
+            nbytes = sum(_shape_bytes(d, s)
+                         for d, s in _TUPLE_SHAPE_RE.findall(lhs.split("=", 1)[1]))
+        else:
+            nbytes = _shape_bytes(m.group(1), m.group(2))
+        st.bytes_by_kind[kind] = st.bytes_by_kind.get(kind, 0) + nbytes
+        st.count_by_kind[kind] = st.count_by_kind.get(kind, 0) + 1
+    return st
+
+
+ICI_LINKS = 2  # bidirectional ring on one torus axis engages 2 links/chip
+
+
+@dataclass
+class Roofline:
+    """All quantities are PER CHIP (from the per-partition HLO module,
+    while-loop bodies multiplied by trip count — see hlo_parse)."""
+
+    flops: float
+    hbm_bytes: float
+    collective_link_bytes: float
+    n_chips: int
+    detail: dict = field(default_factory=dict)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_link_bytes / (ICI_BW * ICI_LINKS)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        """Roofline step time (perfect overlap of the three engines)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_per_chip": self.flops, "hbm_bytes_per_chip": self.hbm_bytes,
+            "collective_link_bytes_per_chip": self.collective_link_bytes,
+            "n_chips": self.n_chips,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck, "t_bound_s": self.t_bound,
+            "detail": self.detail,
+        }
+
+
+def roofline_from_compiled(compiled, n_chips: int) -> Roofline:
+    from . import hlo_parse
+    cost = hlo_parse.analyze(compiled.as_text(), n_chips)
+    raw = dict(compiled.cost_analysis() or {})
+    return Roofline(
+        flops=cost.flops, hbm_bytes=cost.bytes,
+        collective_link_bytes=cost.collective_link_bytes, n_chips=n_chips,
+        detail={
+            "collective_bytes_by_kind": cost.collective_bytes,
+            "collective_counts": cost.collective_counts,
+            "unparsed_whiles": cost.unparsed_whiles,
+            # raw XLA numbers for reference — loop bodies counted ONCE there
+            "xla_cost_analysis_flops": raw.get("flops"),
+            "xla_cost_analysis_bytes": raw.get("bytes accessed"),
+        })
+
+
+def model_flops(cfg, shape, n_params_active: int) -> float:
+    """6·N_active·D (per step for train; per generated token × batch for
+    decode; prefill counts forward-only ⇒ 2·N·D)."""
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * n_params_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return 2.0 * n_params_active * tokens
+    return 2.0 * n_params_active * shape.global_batch  # decode: 1 tok/seq

@@ -1,0 +1,350 @@
+"""Trip-count-aware HLO analyzer.
+
+``compiled.cost_analysis()`` counts a while-loop (lax.scan) body ONCE — for
+scan-over-layers models that undercounts FLOPs/bytes/collectives by ~the
+layer count (verified in tests). This module parses the compiled
+*per-partition* HLO text instead and walks the call graph multiplying every
+while body by its trip count (recovered from the loop condition constant).
+
+Per instruction we accumulate:
+* flops        — dot/convolution contractions (2·|out|·|contract|)
+* hbm bytes    — operand reads + output writes of top-level instructions
+                 (fusion internals are registers: counted at the call site)
+* collectives  — per-kind link-bytes using ring-model factors and the
+                 replica-group size parsed from the op.
+
+All numbers are PER CHIP (the module is the per-partition program).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3": 1, "f8e3m4": 1, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?(%?[\w.\-]+)\s*\((.*?)\)\s*->")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*(\(?[^=]*?)\s*"
+                       r"([a-z][a-z0-9\-]*)\((.*)$")
+_OPERAND_RE = re.compile(r"%[\w.\-]+")
+_CALLEE_RE = re.compile(r"(?:calls|to_apply|body|condition)=(%[\w.\-]+)")
+_WHILE_RE = re.compile(r"condition=(%[\w.\-]+),?\s*body=(%[\w.\-]+)|"
+                       r"body=(%[\w.\-]+),?\s*condition=(%[\w.\-]+)")
+_DOT_DIMS_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_CONST_RE = re.compile(r"=\s*s32\[\]\s*constant\((\d+)\)")
+_GROUPS_V1_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+_BYTES_SKIP = {"parameter", "constant", "get-tuple-element", "tuple",
+               "bitcast", "after-all", "iota", "partition-id", "replica-id"}
+
+
+def shape_bytes(type_str: str) -> int:
+    """Bytes of 'bf16[6,64,128]{2,1,0}' or a '(tuple, of, shapes)'."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def shape_elems(type_str: str) -> int:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return 0
+    n = 1
+    if m.group(2):
+        for d in m.group(2).split(","):
+            n *= int(d)
+    return n
+
+
+@dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str  # everything after the opening paren of operands
+
+    @property
+    def out_bytes(self) -> int:
+        return shape_bytes(self.type_str)
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    by_name: Dict[str, Instr] = field(default_factory=dict)
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry_name = None
+    comment_re = re.compile(r"/\*.*?\*/")
+    for raw in text.splitlines():
+        line = comment_re.sub("", raw).rstrip()
+        if not line:
+            continue
+        if not line.startswith(" "):  # computation header or closing brace
+            m = _COMP_HDR_RE.match(line)
+            if m and line.endswith("{"):
+                cur = Computation(m.group(1))
+                comps[cur.name] = cur
+                if line.startswith("ENTRY"):
+                    entry_name = cur.name
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        ins = Instr(name=m.group(1), type_str=m.group(2), opcode=m.group(3),
+                    rest=m.group(4))
+        cur.instrs.append(ins)
+        cur.by_name[ins.name] = ins
+    if entry_name:
+        comps["__entry__"] = comps[entry_name]
+    return comps
+
+
+def _operand_names(ins: Instr) -> List[str]:
+    # operands are before the closing paren of the op's argument list;
+    # attribute refs (body=%x) come after — strip by splitting at '),' best-effort
+    args = ins.rest.split(")", 1)[0]
+    return _OPERAND_RE.findall(args)
+
+
+def _trip_count(cond: Computation) -> Optional[int]:
+    consts = []
+    for ins in cond.instrs:
+        mm = _CONST_RE.search(f"= {ins.type_str} {ins.opcode}({ins.rest}")
+        if ins.opcode == "constant" and ins.type_str.strip() == "s32[]":
+            m2 = re.search(r"constant\((\d+)\)", "constant(" + ins.rest)
+            if m2:
+                consts.append(int(m2.group(1)))
+    if consts:
+        return max(consts)
+    return None
+
+
+def _dot_flops(ins: Instr, comp: Computation) -> int:
+    out_elems = shape_elems(ins.type_str)
+    m = _DOT_DIMS_RE.search(ins.rest)
+    ops = _operand_names(ins)
+    if not m or not ops:
+        return 2 * out_elems  # unknown contraction — degenerate
+    lhs = comp.by_name.get(ops[0])
+    if lhs is None:
+        return 2 * out_elems
+    dims_str = _SHAPE_RE.search(lhs.type_str)
+    if not dims_str or not dims_str.group(2):
+        return 2 * out_elems
+    lhs_dims = [int(d) for d in dims_str.group(2).split(",")]
+    contract = 1
+    if m.group(1):
+        for i in m.group(1).split(","):
+            contract *= lhs_dims[int(i)]
+    return 2 * out_elems * contract
+
+
+def _group_size(ins: Instr, n_chips: int) -> int:
+    m = _GROUPS_V1_RE.search(ins.rest)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    m = _GROUPS_V2_RE.search(ins.rest)
+    if m:
+        return max(int(m.group(2)), 1)
+    return n_chips
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: Dict[str, float] = field(default_factory=dict)
+    collective_link_bytes: float = 0.0  # ring-model per-chip
+    collective_counts: Dict[str, float] = field(default_factory=dict)
+    unparsed_whiles: int = 0
+
+    def add_collective(self, kind: str, nbytes: float, count: float,
+                       group: int):
+        self.collective_bytes[kind] = self.collective_bytes.get(kind, 0.0) + nbytes
+        self.collective_counts[kind] = self.collective_counts.get(kind, 0.0) + count
+        f = (group - 1) / group if group > 1 else 0.0
+        if kind == "all-reduce":
+            link = 2.0 * f * nbytes
+        elif kind == "all-gather":
+            link = f * nbytes
+        elif kind == "reduce-scatter":
+            link = (group - 1) * nbytes  # output is the scattered shard
+        elif kind == "all-to-all":
+            link = f * nbytes
+        else:  # collective-permute
+            link = nbytes
+        self.collective_link_bytes += link
+
+    def as_dict(self) -> dict:
+        return {"flops": self.flops, "bytes": self.bytes,
+                "collective_bytes": dict(self.collective_bytes),
+                "collective_counts": dict(self.collective_counts),
+                "collective_link_bytes": self.collective_link_bytes,
+                "unparsed_whiles": self.unparsed_whiles}
+
+
+def analyze(text: str, n_chips: int) -> HloCost:
+    comps = parse_module(text)
+    cost = HloCost()
+    entry = comps.get("__entry__")
+    if entry is None:
+        return cost
+    seen_fusion_flops: set = set()
+
+    def flops_of_computation(comp: Computation, mult: float):
+        for ins in comp.instrs:
+            if ins.opcode in ("dot", "convolution"):
+                cost.flops += mult * _dot_flops(ins, comp)
+            elif ins.opcode == "fusion":
+                m = _CALLEE_RE.search(ins.rest)
+                if m and m.group(1) in comps:
+                    flops_of_computation(comps[m.group(1)], mult)
+            elif ins.opcode == "while":
+                _walk_while(ins, mult, flops_only=True)
+            elif ins.opcode in ("call", "conditional", "sort", "reduce",
+                                "map", "scatter", "reduce-window",
+                                "select-and-scatter"):
+                m = _CALLEE_RE.search(ins.rest)
+                if m and m.group(1) in comps:
+                    flops_of_computation(comps[m.group(1)], mult)
+
+    def _fusion_read_bytes(ins: Instr, comp: Computation) -> int:
+        """Reads of a fusion: parameters consumed ONLY through slice-like
+        ops are charged at the slice size (real hardware streams the slice,
+        not the whole stacked operand — critical for scan-over-layers where
+        the per-layer weight slice is fused with its consumers)."""
+        m = _CALLEE_RE.search(ins.rest)
+        fused = comps.get(m.group(1)) if m else None
+        operands = _operand_names(ins)
+        sizes = []
+        for i, op_name in enumerate(operands):
+            src = comp.by_name.get(op_name)
+            if src is None or src.opcode == "constant":
+                sizes.append(0)
+                continue
+            full = src.out_bytes
+            if fused is None:
+                sizes.append(full)
+                continue
+            # find the fused parameter(i) and how it is consumed
+            param_name = None
+            for fi in fused.instrs:
+                if fi.opcode == "parameter" and fi.rest.startswith(f"{i})"):
+                    param_name = fi.name
+                    break
+            if param_name is None:
+                sizes.append(full)
+                continue
+            users = [fi for fi in fused.instrs
+                     if param_name in _operand_names(fi)]
+            if users and all(u.opcode in ("dynamic-slice", "slice", "gather")
+                             for u in users):
+                sizes.append(sum(u.out_bytes for u in users))
+            elif users and all(u.opcode == "dynamic-update-slice"
+                               for u in users):
+                # in-place region write: charge the update size
+                upd = 0
+                for u in users:
+                    ops_u = _operand_names(u)
+                    s2 = fused.by_name.get(ops_u[1]) if len(ops_u) > 1 else None
+                    upd += s2.out_bytes if s2 is not None else u.out_bytes
+                sizes.append(upd)
+            else:
+                sizes.append(full)
+        return sum(sizes)
+
+    def bytes_of_computation(comp: Computation, mult: float):
+        for ins in comp.instrs:
+            if ins.opcode == "while":
+                _walk_while(ins, mult, flops_only=False)
+                continue
+            if ins.opcode in COLLECTIVE_OPS:
+                g = _group_size(ins, n_chips)
+                cost.add_collective(ins.opcode, mult * ins.out_bytes, mult, g)
+                continue
+            if ins.opcode in _BYTES_SKIP:
+                continue
+            if ins.opcode in ("dynamic-slice", "slice", "gather"):
+                # reads only the sliced region ≈ output size
+                cost.bytes += mult * 2 * ins.out_bytes
+                continue
+            if ins.opcode == "dynamic-update-slice":
+                # reads the update, writes that region in place
+                ops = _operand_names(ins)
+                upd = comp.by_name.get(ops[1]) if len(ops) > 1 else None
+                nb = upd.out_bytes if upd is not None else ins.out_bytes
+                cost.bytes += mult * 2 * nb
+                continue
+            if ins.opcode == "fusion":
+                reads = _fusion_read_bytes(ins, comp)
+                out_b = ins.out_bytes
+                # a fusion whose ROOT is a dynamic-update-slice writes only
+                # the updated region; approximate with the update size
+                mdus = _CALLEE_RE.search(ins.rest)
+                fused = comps.get(mdus.group(1)) if mdus else None
+                if fused and fused.instrs and \
+                        fused.instrs[-1].opcode == "dynamic-update-slice":
+                    ops_u = _operand_names(fused.instrs[-1])
+                    s2 = fused.by_name.get(ops_u[1]) if len(ops_u) > 1 else None
+                    if s2 is not None:
+                        out_b = s2.out_bytes
+                cost.bytes += mult * (reads + out_b)
+                continue
+            reads = 0
+            for op_name in _operand_names(ins):
+                src = comp.by_name.get(op_name)
+                if src is not None and src.opcode not in ("constant",):
+                    reads += src.out_bytes
+            cost.bytes += mult * (reads + ins.out_bytes)
+            if ins.opcode in ("call", "conditional"):
+                m = _CALLEE_RE.search(ins.rest)
+                if m and m.group(1) in comps:
+                    bytes_of_computation(comps[m.group(1)], mult)
+
+    def _walk_while(ins: Instr, mult: float, flops_only: bool):
+        m = _WHILE_RE.search(ins.rest)
+        if not m:
+            cost.unparsed_whiles += 1
+            return
+        cond_name = m.group(1) or m.group(4)
+        body_name = m.group(2) or m.group(3)
+        trips = None
+        if cond_name in comps:
+            trips = _trip_count(comps[cond_name])
+        if trips is None:
+            trips = 1
+            cost.unparsed_whiles += 1
+        body = comps.get(body_name)
+        if body is None:
+            return
+        if flops_only:
+            flops_of_computation(body, mult * trips)
+        else:
+            bytes_of_computation(body, mult * trips)
+
+    flops_of_computation(entry, 1.0)
+    bytes_of_computation(entry, 1.0)
+    return cost

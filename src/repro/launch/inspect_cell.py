@@ -1,0 +1,94 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Hillclimb profiler: recompile one dry-run cell and print the top
+byte/FLOP contributors (trip-count-weighted), plus collective breakdown.
+
+Usage: python -m repro.launch.inspect_cell --arch hymba-1.5b --shape long_500k
+"""
+import argparse
+
+import jax
+
+from repro import configs
+from repro.launch import dryrun, hlo_parse
+from repro.launch.mesh import make_production_mesh
+from repro.parallel import ctx as pctx
+
+
+def top_contributors(text: str, n_chips: int, top: int = 25):
+    comps = hlo_parse.parse_module(text)
+    entry = comps["__entry__"]
+    rows = []
+
+    def walk(comp, mult):
+        for ins in comp.instrs:
+            if ins.opcode == "while":
+                m = hlo_parse._WHILE_RE.search(ins.rest)
+                if m:
+                    cond = m.group(1) or m.group(4)
+                    body = m.group(2) or m.group(3)
+                    trips = (hlo_parse._trip_count(comps[cond]) or 1) \
+                        if cond in comps else 1
+                    walk(comps[body], mult * trips)
+                continue
+            if ins.opcode in hlo_parse.COLLECTIVE_OPS:
+                rows.append((mult * ins.out_bytes, 0.0,
+                             f"{ins.opcode} {ins.type_str[:50]}", comp.name))
+                continue
+            if ins.opcode in hlo_parse._BYTES_SKIP:
+                continue
+            if ins.opcode in ("dynamic-slice", "slice", "gather"):
+                b = 2 * ins.out_bytes
+            elif ins.opcode == "dynamic-update-slice":
+                ops = hlo_parse._operand_names(ins)
+                upd = comp.by_name.get(ops[1]) if len(ops) > 1 else None
+                b = 2 * (upd.out_bytes if upd else ins.out_bytes)
+            else:
+                reads = sum(comp.by_name[o].out_bytes
+                            for o in hlo_parse._operand_names(ins)
+                            if o in comp.by_name
+                            and comp.by_name[o].opcode != "constant")
+                b = reads + ins.out_bytes
+            f = hlo_parse._dot_flops(ins, comp) if ins.opcode in ("dot",) else 0
+            rows.append((mult * b, mult * f,
+                         f"{ins.opcode} {ins.name[:28]} {ins.type_str[:44]}",
+                         comp.name[:28]))
+
+    walk(entry, 1.0)
+    rows.sort(reverse=True)
+    print(f"{'bytes':>12s} {'flops':>12s}  instr")
+    for b, f, desc, cn in rows[:top]:
+        print(f"{b:12.3e} {f:12.3e}  {desc}  [{cn}]")
+    rows.sort(key=lambda r: -r[1])
+    print("\ntop flops:")
+    for b, f, desc, cn in rows[:10]:
+        if f > 0:
+            print(f"{b:12.3e} {f:12.3e}  {desc}  [{cn}]")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--top", type=int, default=25)
+    args = ap.parse_args()
+    cfg = configs.get_config(args.arch).with_dtypes("bfloat16", "bfloat16")
+    shape = configs.get_shape(args.shape)
+    cfg = cfg.replace(remat=True,
+                      seq_parallel=shape.kind in ("train", "prefill"))
+    mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+    with pctx.use_mesh(mesh), mesh:
+        fn, a, in_sh, out_sh = dryrun.build_cell(cfg, shape, mesh)
+        compiled = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh).lower(*a).compile()
+    text = compiled.as_text()
+    cost = hlo_parse.analyze(text, int(mesh.devices.size))
+    print("totals:", {k: v for k, v in cost.as_dict().items()
+                      if k in ("flops", "bytes", "collective_link_bytes")})
+    print("collectives:", cost.collective_bytes, cost.collective_counts)
+    top_contributors(text, int(mesh.devices.size), args.top)
+
+
+if __name__ == "__main__":
+    main()

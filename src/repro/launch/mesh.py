@@ -1,0 +1,23 @@
+"""Production mesh definitions.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state. Single pod = 16×16 = 256 chips (one v5e pod);
+multi-pod adds a leading ``pod`` axis (2 × 256 = 512 chips).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over the locally-available devices (tests / examples)."""
+    n = len(jax.devices())
+    data = min(data, n)
+    model = min(model, max(n // data, 1))
+    return jax.make_mesh((data, model), ("data", "model"))

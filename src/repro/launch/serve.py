@@ -1,0 +1,33 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch <id> [...]``.
+
+Batched prefill + decode with top-K (most interesting = highest predictive
+entropy) request retention across the tiered store — the paper's workflow
+with the serving fleet as producer. Reduced configs on CPU; same entry
+point under the production mesh on hardware.
+"""
+from __future__ import annotations
+
+import argparse
+import subprocess
+import sys
+
+
+def main():
+    # serve_topk.py is the reference implementation; keep a single code path
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--batch", type=int, default=8)
+    args, extra = ap.parse_known_args()
+    import repro  # noqa: F401 — ensure PYTHONPATH is sane before spawning
+    import os
+    here = os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__)))))
+    script = os.path.join(here, "examples", "serve_topk.py")
+    cmd = [sys.executable, script, "--arch", args.arch,
+           "--requests", str(args.requests), "--batch", str(args.batch)] + extra
+    raise SystemExit(subprocess.call(cmd))
+
+
+if __name__ == "__main__":
+    main()

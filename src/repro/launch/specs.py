@@ -1,0 +1,54 @@
+"""Abstract input specs for the dry-run: ShapeDtypeStruct stand-ins for
+every model input / state — weak-type-correct, shardable, no allocation."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import lm
+from repro.runtime import steps
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), dtype)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Training / prefill batch (tokens+labels / tokens)."""
+    b = shape.global_batch
+    s = shape.seq_len
+    dec_len = cfg.decoder_len if cfg.is_encoder_decoder else s
+    out = {"tokens": sds((b, dec_len), jnp.int32)}
+    if shape.is_train:
+        out["labels"] = sds((b, dec_len), jnp.int32)
+        out["example_ids"] = sds((b,), jnp.int32)
+    if cfg.is_encoder_decoder:
+        out["frames"] = sds((b, s, cfg.d_model), jnp.float32)
+    if cfg.frontend == "vision_patches":
+        out["patch_embeds"] = sds((b, cfg.n_patches, cfg.d_model), jnp.float32)
+    return out
+
+
+def cache_len(cfg: ModelConfig, total: int) -> int:
+    w = cfg.max_window
+    return min(w, total) if w > 0 else total
+
+
+def decode_inputs(cfg: ModelConfig, shape: ShapeConfig):
+    """(token_spec, cache_spec) for a serve_step with a seq_len-deep cache."""
+    b = shape.global_batch
+    if cfg.is_encoder_decoder:
+        kv = cache_len(cfg, cfg.decoder_len + 1)
+        enc_len = shape.seq_len
+    else:
+        kv = cache_len(cfg, shape.seq_len)
+        enc_len = 0
+    cache = jax.eval_shape(lambda: lm.init_cache(cfg, b, kv, enc_len=enc_len))
+    tok = sds((b,), jnp.int32)
+    return tok, cache
+
+
+def train_state_spec(cfg: ModelConfig, reservoir_k: int = 1024):
+    return steps.abstract_train_state(cfg, reservoir_k)

@@ -1,0 +1,73 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Runs the fault-tolerant loop (auto-resume, SIGTERM-safe, straggler
+watchdog) with top-K tiered curation for any registered architecture.
+On this CPU host use ``--reduced`` (full configs are exercised via the
+dry-run); on a real cluster the same entry point runs the full config
+under the production mesh.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.checkpoint import CheckpointManager
+from repro.configs.base import ShapeConfig
+from repro.core import costs, placement, shp, tiers
+from repro.data.curation import TopKCurator
+from repro.data.pipeline import StreamLoader
+from repro.models import param_count
+from repro.runtime import train_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=configs.list_archs())
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced config (CPU-scale smoke)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--reservoir-k", type=int, default=32)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    cfg = configs.get_config(args.arch, reduced=args.reduced)
+    print(f"{args.arch}: {param_count(cfg)/1e6:.1f}M params "
+          f"({'reduced' if args.reduced else 'FULL'})")
+    shape = ShapeConfig("cli", seq_len=args.seq, global_batch=args.batch,
+                        kind="train")
+    loader = StreamLoader(cfg, shape, seed=0)
+
+    n_docs = args.steps * args.batch
+    k = min(args.reservoir_k, max(n_docs // 4, 1))
+    args.reservoir_k = k
+    cm = costs.hbm_host_preset(n_docs=n_docs, k=k,
+                               doc_gb=args.seq * 4 / 1e9,
+                               window_seconds=3600.0)
+    plan = shp.plan_placement(cm)
+    pol = placement.from_plan(plan)
+    print(f"SHP curation plan: {plan.strategy} r*/N={plan.best.r_over_n:.3f}")
+    dec_len = cfg.decoder_len if cfg.is_encoder_decoder else args.seq
+    store = tiers.TieredStore(
+        pol, tiers.HotTier(args.reservoir_k, (dec_len,), dtype=jnp.int32),
+        tiers.ColdTier())
+    curator = TopKCurator(args.reservoir_k, store, policy=pol)
+    ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+
+    report = train_loop.run(
+        cfg, loader, loop=train_loop.LoopConfig(
+            total_steps=args.steps, ckpt_every=max(args.steps // 2, 1),
+            log_every=max(args.steps // 10, 1), lr=args.lr),
+        ckpt=ckpt, curator=curator,
+        on_metrics=lambda s, m: print(f"  step {s} loss {m['loss']:.3f}"))
+    print(f"done: loss {report.losses[0]:.3f} -> {report.losses[-1]:.3f}; "
+          f"curation {curator.stats.as_dict()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from . import attention, blocks, common, ffn, lm, ssm  # noqa: F401
+from .lm import (abstract_params, decode_step, forward, init_cache,  # noqa: F401
+                 init_params, lm_loss, param_count, prefill)

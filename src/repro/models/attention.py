@@ -1,0 +1,448 @@
+"""Attention mixers: GQA (full / sliding-window / chunked-flash), MLA
+(DeepSeek-V2, with absorbed-weight decode), and cross-attention.
+
+Memory discipline: anything with long KV (prefill_32k, hymba's global layers
+at 500k) routes through ``chunked_attention`` — an online-softmax scan over
+KV blocks (flash-attention dataflow in pure JAX; the Pallas analogue would
+tile the same loop into VMEM). Caches carry explicit key positions so
+rolling (sliding-window) and full caches share one code path.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import apply_rope, init_dense
+from repro.parallel import ctx as pctx
+
+BIG_NEG = -2.0e9  # mask value safe in bf16/f32
+CHUNK_THRESHOLD = 4096  # KV lengths above this use the chunked path
+KV_CHUNK = 1024
+
+
+# ---------------------------------------------------------------------------
+# Parameter construction
+# ---------------------------------------------------------------------------
+
+def gqa_params(key, cfg, dtype):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": init_dense(ks[0], (d, h, hd), (0,), dtype),
+        "wk": init_dense(ks[1], (d, kv, hd), (0,), dtype),
+        "wv": init_dense(ks[2], (d, kv, hd), (0,), dtype),
+        "wo": init_dense(ks[3], (h, hd, d), (0, 1), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, hd), dtype)
+        p["bk"] = jnp.zeros((kv, hd), dtype)
+        p["bv"] = jnp.zeros((kv, hd), dtype)
+        p["bo"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def mla_params(key, cfg, dtype):
+    d = cfg.d_model
+    h = cfg.n_heads
+    qk = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+    ks = jax.random.split(key, 6)
+    p = {
+        "wkv_a": init_dense(ks[0], (d, cfg.kv_lora_rank + cfg.qk_rope_head_dim), (0,), dtype),
+        "kv_norm": jnp.zeros((cfg.kv_lora_rank,), dtype),
+        "wkv_b": init_dense(ks[1], (cfg.kv_lora_rank, h, cfg.qk_nope_head_dim + cfg.v_head_dim), (0,), dtype),
+        "wo": init_dense(ks[2], (h, cfg.v_head_dim, d), (0, 1), dtype),
+    }
+    if cfg.q_lora_rank > 0:
+        p["wq_a"] = init_dense(ks[3], (d, cfg.q_lora_rank), (0,), dtype)
+        p["q_norm"] = jnp.zeros((cfg.q_lora_rank,), dtype)
+        p["wq_b"] = init_dense(ks[4], (cfg.q_lora_rank, h, qk), (0,), dtype)
+    else:
+        p["wq"] = init_dense(ks[5], (d, h, qk), (0,), dtype)
+    return p
+
+
+def cross_params(key, cfg, dtype):
+    """K/V over encoder states + Q over decoder states (whisper cross-attn)."""
+    return gqa_params(key, cfg, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Masked softmax attention over grouped heads
+# ---------------------------------------------------------------------------
+
+def mask_ok(q_pos, kv_pos, causal: bool, window):
+    """(..., Sq, Skv) boolean mask. kv_pos < 0 marks invalid cache slots."""
+    dq = q_pos[..., :, None]
+    dk = kv_pos[..., None, :]
+    ok = dk >= 0
+    if causal:
+        ok = ok & (dk <= dq)
+    w = jnp.asarray(window, jnp.int32)
+    ok = ok & jnp.where(w > 0, dk > dq - w, True)
+    return ok
+
+
+def _softcap(x, cap: float):
+    if cap and cap > 0:
+        return jnp.tanh(x / cap) * cap
+    return x
+
+
+def _expand_kv(k, h: int):
+    """(B,S,KV,hd) → (B,S,H,hd) by repeating each KV head over its group.
+
+    TP rationale (DESIGN §5): scoring in the grouped (KV,G) layout cannot
+    shard when KV < tp, which replicates the whole quadratic attention on
+    every model-axis chip. Expanded to H query-heads, the per-head layout
+    shards H over `model` whenever H divides — the expansion itself is a
+    gather whose output is already sharded, so per-chip KV bytes go DOWN.
+    attend() only expands when that condition holds (§Perf iteration 1
+    showed unconditional expansion all-gathers the full cache when H is
+    NOT divisible — e.g. hymba's 25 heads at 500k context)."""
+    kvh = k.shape[2]
+    if kvh == h:
+        return k
+    idx = jnp.arange(h, dtype=jnp.int32) // (h // kvh)
+    k = jnp.take(k, idx, axis=2)
+    return pctx.shard(k, pctx.BATCH, None, pctx.MODEL, None)
+
+
+def grouped_attention(q, k, v, q_pos, kv_pos, *, causal, window, softcap=0.0,
+                      scale=None):
+    """q: (B,Sq,H,hd) — k,v: (B,Skv,KV,hd), KV | H — returns (B,Sq,H,hd_v).
+    Dense path; fine for Skv ≤ CHUNK_THRESHOLD."""
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    scale = scale or 1.0 / math.sqrt(hd)
+    qg = (q * scale).astype(jnp.float32).reshape(b, sq, kvh, g, hd)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, k.astype(jnp.float32))
+    logits = _softcap(logits, softcap)
+    ok = mask_ok(q_pos, kv_pos, causal, window)  # (B, Sq, Skv)
+    logits = jnp.where(ok[:, None, None], logits, BIG_NEG)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs.astype(v.dtype), v)
+    return out.reshape(b, sq, h, v.shape[-1])
+
+
+def chunked_attention(q, k, v, q_pos, kv_pos, *, causal, window, softcap=0.0,
+                      scale=None, chunk=KV_CHUNK):
+    """Online-softmax scan over KV chunks: O(Sq·chunk) live memory."""
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    skv = k.shape[1]
+    hdv = v.shape[-1]
+    scale = scale or 1.0 / math.sqrt(hd)
+    pad = (-skv) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad)), constant_values=-1)
+    n_chunks = k.shape[1] // chunk
+    qg = (q.astype(jnp.float32) * scale).reshape(b, sq, kvh, g, hd)
+    kc = k.reshape(b, n_chunks, chunk, kvh, hd)
+    vc = v.reshape(b, n_chunks, chunk, kvh, hdv)
+    pc = kv_pos.reshape(b, n_chunks, chunk)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kb, vb, pb = xs  # (b, chunk, kvh, hd), (b, chunk)
+        logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, kb.astype(jnp.float32))
+        logits = _softcap(logits, softcap)
+        ok = mask_ok(q_pos, pb, causal, window)
+        logits = jnp.where(ok[:, None, None], logits, BIG_NEG)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(logits - m_new[..., None])
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bkgqs,bskd->bkgqd", p, vb.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, kvh, g, sq), BIG_NEG, jnp.float32)
+    l0 = jnp.zeros((b, kvh, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, kvh, g, sq, hdv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0),
+        (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0), jnp.moveaxis(pc, 1, 0)))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    out = jnp.moveaxis(out, 3, 1)  # (b, sq, kvh, g, hdv)
+    return out.reshape(b, sq, h, hdv).astype(v.dtype)
+
+
+def attend(q, k, v, q_pos, kv_pos, *, seq_parallel_q=False, **kw):
+    tp = pctx.tp_size()
+    h = q.shape[2]
+    if seq_parallel_q and tp > 1 and q.shape[1] > 1 and q.shape[1] % tp == 0:
+        # sequence-parallel attention: q (and the whole score tensor) stay
+        # sharded on the query-sequence dim; K/V are gathered full (they
+        # are ~d_kv/d_model of the residual — far cheaper to gather than x,
+        # and no score-tensor relayout — §Perf iteration 3b)
+        q = pctx.shard(q, pctx.BATCH, pctx.MODEL, None, None)
+        k = pctx.shard(k, pctx.BATCH, None, None, None)
+        v = pctx.shard(v, pctx.BATCH, None, None, None)
+    else:
+        # expand KV→H heads only when that lets the score tensor shard over
+        # `model`; else the grouped layout keeps replicated KV bytes small
+        if tp > 1 and k.shape[2] != h and h % tp == 0:
+            k = _expand_kv(k, h)
+            v = _expand_kv(v, h)
+        # heads that cannot shard over `model` (H % tp != 0) fall back to
+        # sequence-sharding the queries
+        if tp > 1 and h % tp != 0 and q.shape[1] > 1 and q.shape[1] % tp == 0:
+            q = pctx.shard(q, pctx.BATCH, pctx.MODEL, None, None)
+    # chunked (flash-dataflow) only when BOTH sides are long: for decode
+    # (Sq=1) the dense einsum keeps the KV-sequence sharding intact (no
+    # reshape), so GSPMD distributes the softmax over the cache shards —
+    # §Perf iteration 2: the chunk-scan's reshape forced replication.
+    if q.shape[1] > 1 and k.shape[1] > CHUNK_THRESHOLD:
+        return chunked_attention(q, k, v, q_pos, kv_pos, **kw)
+    return grouped_attention(q, k, v, q_pos, kv_pos, **kw)
+
+
+# ---------------------------------------------------------------------------
+# KV cache (full or rolling window) — slot = pos % W
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (B, W, KV, hd)
+    v: jax.Array  # (B, W, KV, hd)
+    pos: jax.Array  # (B, W) int32 key positions, -1 = empty
+
+
+def init_kv_cache(batch, w, kvh, hd, dtype):
+    return KVCache(
+        k=jnp.zeros((batch, w, kvh, hd), dtype),
+        v=jnp.zeros((batch, w, kvh, hd), dtype),
+        pos=jnp.full((batch, w), -1, jnp.int32),
+    )
+
+
+def cache_write(cache: KVCache, k_new, v_new, positions) -> KVCache:
+    """Write S_new entries at ``positions`` (B, S_new) into rolling slots.
+    If S_new ≥ W (prefill longer than a rolling window) only the last W
+    entries are written — earlier ones would be overwritten anyway, and
+    duplicate scatter indices have undefined order."""
+    w = cache.k.shape[1]
+    if k_new.shape[1] >= w:
+        k_new, v_new = k_new[:, -w:], v_new[:, -w:]
+        positions = positions[:, -w:]
+    slots = positions % w  # (B, S_new)
+    bidx = jnp.arange(cache.k.shape[0])[:, None]
+    return KVCache(
+        k=cache.k.at[bidx, slots].set(k_new),
+        v=cache.v.at[bidx, slots].set(v_new),
+        pos=cache.pos.at[bidx, slots].set(positions.astype(jnp.int32)),
+    )
+
+
+# ---------------------------------------------------------------------------
+# GQA forward (train / prefill / decode in one function)
+# ---------------------------------------------------------------------------
+
+def gqa_forward(p, x, positions, cfg, *, causal=True, window=0,
+                cache: Optional[KVCache] = None, kv_source=None):
+    """x: (B,S,D). positions: (B,S). If ``cache`` is given, new K/V are
+    written at ``positions`` and attention runs over the cache (decode /
+    prefill). ``kv_source`` overrides the K/V input (cross-attention)."""
+    src = x if kv_source is None else kv_source
+    sp = cfg.seq_parallel and x.shape[1] > 1
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", src, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", src, p["wv"])
+    if not sp:  # head-TP layout; under SP attend() pins the seq layout
+        q = pctx.shard(q, pctx.BATCH, None, pctx.MODEL, None)
+        k = pctx.shard(k, pctx.BATCH, None, pctx.MODEL, None)
+        v = pctx.shard(v, pctx.BATCH, None, pctx.MODEL, None)
+    if "bq" in p:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    if cfg.use_rope and kv_source is None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    if cache is not None and x.shape[1] == 1:
+        # decode: attend over the cache
+        cache = cache_write(cache, k, v, positions)
+        k_all, v_all, kv_pos = cache.k, cache.v, cache.pos
+    elif cache is not None:
+        # prefill: attend over the FULL prompt K/V (a rolling cache may be
+        # shorter than the prompt — intermediate positions still need their
+        # complete window), then persist the tail for decode.
+        cache = cache_write(cache, k, v, positions)
+        k_all, v_all, kv_pos = k, v, positions
+    else:
+        k_all, v_all = k, v
+        if kv_source is None:
+            kv_pos = positions
+        else:  # cross-attention: keys live on the encoder axis
+            kv_pos = jnp.broadcast_to(
+                jnp.arange(src.shape[1], dtype=jnp.int32), src.shape[:2])
+    out = attend(q, k_all, v_all, positions, kv_pos, causal=causal,
+                 window=window, softcap=cfg.attn_logit_softcap,
+                 seq_parallel_q=sp)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    if "bo" in p:
+        y = y + p["bo"]
+    return y, cache
+
+
+# ---------------------------------------------------------------------------
+# MLA forward
+# ---------------------------------------------------------------------------
+
+class MLACache(NamedTuple):
+    ckv: jax.Array  # (B, W, kv_lora)
+    krope: jax.Array  # (B, W, rope_dim)
+    pos: jax.Array  # (B, W)
+
+
+def init_mla_cache(batch, w, cfg, dtype):
+    return MLACache(
+        ckv=jnp.zeros((batch, w, cfg.kv_lora_rank), dtype),
+        krope=jnp.zeros((batch, w, cfg.qk_rope_head_dim), dtype),
+        pos=jnp.full((batch, w), -1, jnp.int32),
+    )
+
+
+def _mla_q(p, x, positions, cfg):
+    if "wq_a" in p:
+        from .common import rmsnorm
+        qa = rmsnorm(jnp.einsum("bsd,dr->bsr", x, p["wq_a"]), p["q_norm"], cfg.norm_eps)
+        q = jnp.einsum("bsr,rhk->bshk", qa, p["wq_b"])
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if not (cfg.seq_parallel and x.shape[1] > 1):
+        q = pctx.shard(q, pctx.BATCH, None, pctx.MODEL, None)
+    qn, qr = q[..., : cfg.qk_nope_head_dim], q[..., cfg.qk_nope_head_dim:]
+    qr = apply_rope(qr, positions, cfg.rope_theta)
+    return qn, qr
+
+
+def _mla_latent(p, x, positions, cfg):
+    from .common import rmsnorm
+    kv = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"])
+    ckv, kr = kv[..., : cfg.kv_lora_rank], kv[..., cfg.kv_lora_rank:]
+    ckv = rmsnorm(ckv, p["kv_norm"], cfg.norm_eps)
+    kr = apply_rope(kr[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    return ckv, kr
+
+
+# latent→per-head expansion is ~42× inflation — stream latent chunks for
+# long prefill. Dense stays at train_4k: the chunk scan's extra copies under
+# remat/backward measured WORSE there (deepseek train t_mem 63→114 s).
+MLA_CHUNK_THRESHOLD = 4096
+MLA_CHUNK = 1024
+
+
+def _mla_attend_latent_chunked(q, ckv, kr, wkb, positions, cfg, *, causal,
+                               scale, chunk=MLA_CHUNK):
+    """Flash-MLA dataflow: stream LATENT chunks, expanding each to per-head
+    K/V on the fly — the full (H, nope+rope) expansion never hits HBM
+    (§Perf: it dominated deepseek prefill traffic at ~2e13 B/chip)."""
+    b, s, h, _ = q.shape
+    nope = cfg.qk_nope_head_dim
+    hdv = cfg.v_head_dim
+    pad = (-s) % chunk
+    kv_pos = positions
+    if pad:
+        ckv = jnp.pad(ckv, ((0, 0), (0, pad), (0, 0)))
+        kr = jnp.pad(kr, ((0, 0), (0, pad), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad)), constant_values=-1)
+    nc = ckv.shape[1] // chunk
+    rs = lambda t: jnp.moveaxis(
+        t.reshape((b, nc, chunk) + t.shape[2:]), 1, 0)
+    qf = q.astype(jnp.float32) * scale
+
+    def body(carry, xs):
+        m, l, acc = carry
+        ckv_c, kr_c, pos_c = xs  # (b, C, R), (b, C, rope), (b, C)
+        kn = jnp.einsum("bcr,rhk->bchk", ckv_c.astype(jnp.float32),
+                        wkb[..., :nope].astype(jnp.float32))
+        vc = jnp.einsum("bcr,rhk->bchk", ckv_c.astype(jnp.float32),
+                        wkb[..., nope:].astype(jnp.float32))
+        kr_b = jnp.broadcast_to(kr_c[:, :, None, :].astype(jnp.float32),
+                                kn.shape[:3] + (kr_c.shape[-1],))
+        kc = jnp.concatenate([kn, kr_b], axis=-1)
+        logits = jnp.einsum("bqhd,bchd->bhqc", qf, kc)
+        ok = mask_ok(positions, pos_c, causal, 0)
+        logits = jnp.where(ok[:, None], logits, BIG_NEG)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        pexp = jnp.exp(logits - m_new[..., None])
+        l_new = l * alpha + pexp.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum("bhqc,bchd->bhqd",
+                                                      pexp, vc)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h, s), BIG_NEG, jnp.float32)
+    l0 = jnp.zeros((b, h, s), jnp.float32)
+    a0 = jnp.zeros((b, h, s, hdv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                  (rs(ckv), rs(kr), rs(kv_pos)))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return jnp.moveaxis(out, 2, 1).astype(q.dtype)  # (b, s, h, hdv)
+
+
+def mla_forward_expanded(p, x, positions, cfg, *, causal=True):
+    """Training / prefill form. Short sequences expand latent → per-head
+    K/V densely; long sequences stream latent chunks (flash-MLA)."""
+    qn, qr = _mla_q(p, x, positions, cfg)
+    ckv, kr = _mla_latent(p, x, positions, cfg)
+    wkb = p["wkv_b"]  # (lora, H, nope+v)
+    q = jnp.concatenate([qn, qr], axis=-1)
+    scale = 1.0 / math.sqrt(cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)
+    sp = cfg.seq_parallel and x.shape[1] > 1
+    if x.shape[1] > MLA_CHUNK_THRESHOLD:
+        if sp and pctx.tp_size() > 1 and x.shape[1] % pctx.tp_size() == 0:
+            q = pctx.shard(q, pctx.BATCH, pctx.MODEL, None, None)
+            ckv = pctx.shard(ckv, pctx.BATCH, None, None)
+            kr = pctx.shard(kr, pctx.BATCH, None, None)
+        out = _mla_attend_latent_chunked(q, ckv, kr, wkb, positions, cfg,
+                                         causal=causal, scale=scale)
+    else:
+        kn = jnp.einsum("bsr,rhk->bshk", ckv, wkb[..., : cfg.qk_nope_head_dim])
+        v = jnp.einsum("bsr,rhk->bshk", ckv, wkb[..., cfg.qk_nope_head_dim:])
+        kr_b = jnp.broadcast_to(kr[:, :, None, :],
+                                kn.shape[:3] + (kr.shape[-1],))
+        k = jnp.concatenate([kn, kr_b], axis=-1)
+        out = attend(q, k, v, positions, positions, causal=causal, window=0,
+                     scale=scale, seq_parallel_q=sp)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def mla_forward_absorbed(p, x, positions, cfg, cache: MLACache, *, causal=True):
+    """Decode form: score queries directly against the latent cache
+    (weight absorption — never materializes per-head K/V over the context)."""
+    b, s = x.shape[:2]
+    h = cfg.n_heads
+    qn, qr = _mla_q(p, x, positions, cfg)  # (B,S,H,nope),(B,S,H,rope)
+    ckv_new, kr_new = _mla_latent(p, x, positions, cfg)
+    w = cache.ckv.shape[1]
+    slots = positions % w
+    bidx = jnp.arange(b)[:, None]
+    cache = MLACache(
+        ckv=cache.ckv.at[bidx, slots].set(ckv_new),
+        krope=cache.krope.at[bidx, slots].set(kr_new),
+        pos=cache.pos.at[bidx, slots].set(positions.astype(jnp.int32)),
+    )
+    wkb = p["wkv_b"]
+    wk = wkb[..., : cfg.qk_nope_head_dim]  # (lora, H, nope)
+    wv = wkb[..., cfg.qk_nope_head_dim:]  # (lora, H, v)
+    q_lat = jnp.einsum("bshk,rhk->bshr", qn.astype(jnp.float32),
+                       wk.astype(jnp.float32))  # (B,S,H,lora)
+    scale = 1.0 / math.sqrt(cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)
+    logits = (jnp.einsum("bshr,btr->bhst", q_lat, cache.ckv.astype(jnp.float32))
+              + jnp.einsum("bshk,btk->bhst", qr.astype(jnp.float32),
+                           cache.krope.astype(jnp.float32))) * scale
+    ok = mask_ok(positions, cache.pos, causal, 0)
+    logits = jnp.where(ok[:, None], logits, BIG_NEG)
+    probs = jax.nn.softmax(logits, axis=-1)
+    ctx = jnp.einsum("bhst,btr->bshr", probs, cache.ckv.astype(jnp.float32))
+    out = jnp.einsum("bshr,rhk->bshk", ctx, wv.astype(jnp.float32))
+    y = jnp.einsum("bshk,hkd->bsd", out.astype(x.dtype), p["wo"])
+    return y, cache

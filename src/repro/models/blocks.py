@@ -1,0 +1,147 @@
+"""Layer blocks: (mixer → residual) → (optional cross-attn) → (FFN → residual),
+pre-norm. One ``block_forward`` serves train / prefill / decode; the cache
+entry pytree shape determines behaviour.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import ffn as ffn_mod
+from . import ssm as ssm_mod
+from .common import apply_norm, norm_params
+
+
+def block_params(key, spec, cfg, dtype):
+    ks = jax.random.split(key, 6)
+    p: dict[str, Any] = {}
+    ln = cfg.use_layernorm
+    if spec.mixer in ("attn", "attn_ssm_parallel"):
+        p["attn"] = (attn.mla_params(ks[0], cfg, dtype) if cfg.use_mla
+                     else attn.gqa_params(ks[0], cfg, dtype))
+        p["norm_attn"] = norm_params(cfg.d_model, ln, dtype)
+    if spec.mixer in ("ssm", "attn_ssm_parallel"):
+        p["ssm"] = ssm_mod.ssm_params(ks[1], cfg, dtype)
+        p["norm_ssm"] = norm_params(cfg.d_model, ln, dtype)
+    if spec.cross_attn:
+        p["cross"] = attn.cross_params(ks[2], cfg, dtype)
+        p["norm_cross"] = norm_params(cfg.d_model, ln, dtype)
+    if spec.ffn == "dense":
+        p["ffn"] = ffn_mod.dense_params(ks[3], cfg.d_model, cfg.d_ff,
+                                        cfg.ffn_act, cfg.ffn_bias, dtype)
+        p["norm_ffn"] = norm_params(cfg.d_model, ln, dtype)
+    elif spec.ffn == "moe":
+        p["ffn"] = ffn_mod.moe_params(ks[4], cfg, dtype)
+        p["norm_ffn"] = norm_params(cfg.d_model, ln, dtype)
+    return p
+
+
+def init_layer_cache(spec, cfg, batch, kv_len, dtype, enc_len=0):
+    """Cache entry for ONE layer of this spec (stacked over the group)."""
+    c: dict[str, Any] = {}
+    if spec.mixer in ("attn", "attn_ssm_parallel"):
+        if cfg.use_mla:
+            c["mla"] = attn.init_mla_cache(batch, kv_len, cfg, dtype)
+        else:
+            c["kv"] = attn.init_kv_cache(batch, kv_len, cfg.n_kv_heads,
+                                         cfg.head_dim, dtype)
+    if spec.mixer in ("ssm", "attn_ssm_parallel"):
+        c["ssm"] = ssm_mod.init_ssm_state(batch, cfg, dtype)
+    if spec.cross_attn:
+        c["cross_k"] = jnp.zeros((batch, enc_len, cfg.n_kv_heads, cfg.head_dim), dtype)
+        c["cross_v"] = jnp.zeros((batch, enc_len, cfg.n_kv_heads, cfg.head_dim), dtype)
+    return c
+
+
+def _mixer(p, spec, cfg, x, positions, cache, window):
+    """Returns (mixer_out, new_cache)."""
+    new_cache = dict(cache) if cache is not None else None
+    outs = []
+    if spec.mixer in ("attn", "attn_ssm_parallel"):
+        h = apply_norm(p["norm_attn"], x, cfg.norm_eps, cfg.use_layernorm)
+        if cfg.use_mla:
+            if cache is None:
+                out = attn.mla_forward_expanded(p["attn"], h, positions, cfg,
+                                                causal=spec.causal)
+            elif x.shape[1] == 1:
+                out, mla = attn.mla_forward_absorbed(p["attn"], h, positions,
+                                                     cfg, cache["mla"],
+                                                     causal=spec.causal)
+                new_cache["mla"] = mla
+            else:
+                # prefill: expanded attention + latent cache write
+                ckv, kr = attn._mla_latent(p["attn"], h, positions, cfg)
+                mla = cache["mla"]
+                w = mla.ckv.shape[1]
+                bidx = jnp.arange(h.shape[0])[:, None]
+                slots = positions % w
+                new_cache["mla"] = attn.MLACache(
+                    ckv=mla.ckv.at[bidx, slots].set(ckv),
+                    krope=mla.krope.at[bidx, slots].set(kr),
+                    pos=mla.pos.at[bidx, slots].set(positions.astype(jnp.int32)))
+                out = attn.mla_forward_expanded(p["attn"], h, positions, cfg,
+                                                causal=spec.causal)
+        else:
+            out, kv = attn.gqa_forward(p["attn"], h, positions, cfg,
+                                       causal=spec.causal, window=window,
+                                       cache=None if cache is None else cache["kv"])
+            if cache is not None:
+                new_cache["kv"] = kv
+        outs.append(out)
+    if spec.mixer in ("ssm", "attn_ssm_parallel"):
+        h = apply_norm(p["norm_ssm"], x, cfg.norm_eps, cfg.use_layernorm)
+        state = cache["ssm"] if cache is not None else None
+        out, st = ssm_mod.ssm_forward(p["ssm"], h, cfg, state,
+                                      return_state=cache is not None)
+        if cache is not None:
+            new_cache["ssm"] = st
+        outs.append(out)
+    if not outs:
+        return jnp.zeros_like(x), new_cache
+    mix = outs[0] if len(outs) == 1 else 0.5 * (outs[0] + outs[1])
+    return mix, new_cache
+
+
+def _sp(cfg, x):
+    """Sequence-parallel residual constraint (identity off-mesh / disabled)."""
+    if not cfg.seq_parallel or x.ndim != 3:
+        return x
+    from repro.parallel import ctx as pctx
+    return pctx.shard(x, pctx.BATCH, pctx.MODEL, None)
+
+
+def block_forward(p, spec, cfg, x, positions, cache=None, window=0,
+                  enc_out=None):
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    x = _sp(cfg, x)
+    mix, new_cache = _mixer(p, spec, cfg, x, positions, cache, window)
+    x = x + _sp(cfg, mix)
+    if spec.cross_attn:
+        h = apply_norm(p["norm_cross"], x, cfg.norm_eps, cfg.use_layernorm)
+        if cache is not None and "cross_k" in cache:
+            k, v = cache["cross_k"], cache["cross_v"]
+            enc_pos = jnp.broadcast_to(jnp.arange(k.shape[1], dtype=jnp.int32),
+                                       (k.shape[0], k.shape[1]))
+            q = jnp.einsum("bsd,dhk->bshk", h, p["cross"]["wq"])
+            if "bq" in p["cross"]:
+                q = q + p["cross"]["bq"]
+            out = attn.attend(q, k, v, positions, enc_pos, causal=False, window=0)
+            co = jnp.einsum("bshk,hkd->bsd", out, p["cross"]["wo"])
+            if "bo" in p["cross"]:
+                co = co + p["cross"]["bo"]
+        else:
+            co, _ = attn.gqa_forward(p["cross"], h, positions, cfg,
+                                     causal=False, window=0, kv_source=enc_out)
+        x = x + co
+    if spec.ffn == "dense":
+        h = apply_norm(p["norm_ffn"], x, cfg.norm_eps, cfg.use_layernorm)
+        x = x + _sp(cfg, ffn_mod.dense_forward(p["ffn"], h, cfg.ffn_act))
+    elif spec.ffn == "moe":
+        h = apply_norm(p["norm_ffn"], x, cfg.norm_eps, cfg.use_layernorm)
+        y, aux = ffn_mod.moe_forward(p["ffn"], h, cfg)
+        x = x + _sp(cfg, y)
+    return x, new_cache, aux

@@ -1,0 +1,88 @@
+"""Shared model ops: norms, RoPE, initializers, dtype policy."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+def init_dense(key, shape, in_axes=(0,), dtype=jnp.float32, scale=1.0):
+    """Truncated-normal fan-in init; ``in_axes`` are the contracted dims."""
+    fan_in = int(np.prod([shape[a] for a in in_axes]))
+    std = scale / np.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def rmsnorm(x, scale, eps):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layernorm(x, scale, bias, eps):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def norm_params(d, use_layernorm=False, dtype=jnp.float32):
+    p = {"scale": jnp.zeros((d,), dtype)}
+    if use_layernorm:
+        p = {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+    return p
+
+
+def apply_norm(p, x, eps, use_layernorm=False):
+    if use_layernorm:
+        return layernorm(x, p["scale"], p["bias"], eps)
+    return rmsnorm(x, p["scale"], eps)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_pos(seq_len: int, d_model: int, dtype=jnp.float32):
+    """Whisper-style sinusoidal positional embedding table (S, D)."""
+    pos = jnp.arange(seq_len, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d_model // 2, dtype=jnp.float32)[None, :]
+    inv = jnp.exp(-dim * (np.log(10000.0) / max(d_model // 2 - 1, 1)))
+    ang = pos * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+ACTIVATIONS = {
+    "silu_glu": ("glu", jax.nn.silu),
+    "gelu_glu": ("glu", gelu),
+    "gelu": ("plain", gelu),
+    "silu": ("plain", jax.nn.silu),
+}

@@ -1,0 +1,138 @@
+"""Feed-forward layers: dense (GLU / plain) and Mixture-of-Experts with
+GShard-style capacity dispatch (grouped one-hot einsums — the GSPMD-friendly
+formulation; groups shard over the data axes, experts over the model axis).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import ACTIVATIONS, init_dense
+from repro.parallel import ctx as pctx
+
+
+# ---------------------------------------------------------------------------
+# Dense FFN
+# ---------------------------------------------------------------------------
+
+def dense_params(key, d_model, d_ff, act: str, bias: bool, dtype):
+    kind, _ = ACTIVATIONS[act]
+    ks = jax.random.split(key, 3)
+    p = {"w_up": init_dense(ks[0], (d_model, d_ff), (0,), dtype),
+         "w_down": init_dense(ks[1], (d_ff, d_model), (0,), dtype)}
+    if kind == "glu":
+        p["w_gate"] = init_dense(ks[2], (d_model, d_ff), (0,), dtype)
+    if bias:
+        p["b_up"] = jnp.zeros((d_ff,), dtype)
+        p["b_down"] = jnp.zeros((d_model,), dtype)
+    return p
+
+
+def dense_forward(p, x, act: str):
+    kind, fn = ACTIVATIONS[act]
+    h = jnp.einsum("...d,df->...f", x, p["w_up"])
+    if h.ndim == 3:
+        h = pctx.shard(h, pctx.BATCH, None, pctx.MODEL)
+    if "b_up" in p:
+        h = h + p["b_up"]
+    if kind == "glu":
+        h = fn(jnp.einsum("...d,df->...f", x, p["w_gate"])) * h
+    else:
+        h = fn(h)
+    y = jnp.einsum("...f,fd->...d", h, p["w_down"])
+    if "b_down" in p:
+        y = y + p["b_down"]
+    return y
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+def moe_params(key, cfg, dtype):
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.d_ff_expert
+    kind, _ = ACTIVATIONS["silu_glu"]
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": init_dense(ks[0], (d, e), (0,), jnp.float32),
+        "w_up": init_dense(ks[1], (e, d, f), (1,), dtype),
+        "w_gate": init_dense(ks[2], (e, d, f), (1,), dtype),
+        "w_down": init_dense(ks[3], (e, f, d), (1,), dtype),
+    }
+    if cfg.n_shared_experts > 0:
+        p["shared"] = dense_params(ks[4], d, cfg.n_shared_experts * f,
+                                   "silu_glu", False, dtype)
+    return p
+
+
+def _capacity(group: int, top_k: int, n_experts: int, factor: float) -> int:
+    return max(int(np.ceil(group * top_k * factor / n_experts)), top_k)
+
+
+def moe_dispatch(router_logits, top_k: int, capacity: int, renorm: bool):
+    """router_logits: (G, g, E) → combine (G, g, E, C) float, dispatch = mask.
+
+    Position-in-expert assigned choice-major then token-major (GShard).
+    """
+    g_, s_, e_ = router_logits.shape
+    probs = jax.nn.softmax(router_logits.astype(jnp.float32), axis=-1)
+    gate_vals, experts = jax.lax.top_k(probs, top_k)  # (G, g, k)
+    if renorm:
+        gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+    combine = jnp.zeros((g_, s_, e_, capacity), jnp.float32)
+    counts = jnp.zeros((g_, e_), jnp.int32)
+    for j in range(top_k):
+        m = jax.nn.one_hot(experts[:, :, j], e_, dtype=jnp.int32)  # (G,g,E)
+        pos = counts[:, None, :] + jnp.cumsum(m, axis=1) - m  # (G,g,E)
+        keep = (m > 0) & (pos < capacity)
+        pos_oh = jax.nn.one_hot(jnp.where(keep, pos, capacity), capacity,
+                                dtype=jnp.float32)  # (G,g,E,C); overflow→0
+        combine = combine + pos_oh * (m * keep).astype(jnp.float32)[..., None] \
+            * gate_vals[:, :, j][..., None, None]
+        counts = counts + m.sum(axis=1)
+    return combine
+
+
+def moe_forward(p, x, cfg):
+    """x: (B, S, D) or (T, D). Grouped capacity routing; group size
+    cfg.moe_group_size caps the per-chip dispatch footprint (DESIGN §5)."""
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    x2 = x.reshape(-1, d)
+    t = x2.shape[0]
+    g = min(cfg.moe_group_size, t)
+    n_groups = t // g
+    rem = t - n_groups * g
+    if rem:  # pad to a whole number of groups (padding tokens route but are dropped)
+        x2 = jnp.pad(x2, ((0, g - rem), (0, 0)))
+        n_groups += 1
+    xg = x2.reshape(n_groups, g, d)
+    logits = jnp.einsum("Ggd,de->Gge", xg.astype(jnp.float32), p["router"])
+    cap = _capacity(g, cfg.top_k_experts, cfg.n_experts, cfg.capacity_factor)
+    combine = moe_dispatch(logits, cfg.top_k_experts, cap, cfg.router_scale)
+    dispatch = (combine > 0).astype(x.dtype)
+    xe = pctx.shard(jnp.einsum("Ggd,GgEc->GEcd", xg, dispatch),
+                    pctx.BATCH, pctx.MODEL, None, None)
+    h = jax.nn.silu(jnp.einsum("GEcd,Edf->GEcf", xe, p["w_gate"])) \
+        * jnp.einsum("GEcd,Edf->GEcf", xe, p["w_up"])
+    ye = jnp.einsum("GEcf,Efd->GEcd", h, p["w_down"])
+    y = jnp.einsum("GEcd,GgEc->Ggd", ye, combine.astype(x.dtype))
+    y = y.reshape(-1, d)[:t].reshape(orig_shape)
+    if "shared" in p:
+        y = y + dense_forward(p["shared"], x, "silu_glu")
+    aux = load_balance_loss(logits, cfg.top_k_experts)
+    return y, aux
+
+
+def load_balance_loss(router_logits, top_k: int):
+    """Switch/GShard auxiliary loss: E · Σ_e f_e · p_e."""
+    probs = jax.nn.softmax(router_logits.astype(jnp.float32), axis=-1)
+    e = probs.shape[-1]
+    _, experts = jax.lax.top_k(probs, top_k)
+    assign = jax.nn.one_hot(experts, e).sum(-2)  # (..., E)
+    f = assign.mean(axis=tuple(range(assign.ndim - 1))) / top_k
+    pbar = probs.mean(axis=tuple(range(probs.ndim - 1)))
+    return e * jnp.sum(f * pbar)

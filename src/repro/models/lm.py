@@ -1,0 +1,279 @@
+"""Top-level model: embedding → scanned layer groups → norm → LM head.
+
+Covers decoder-only (dense/MoE/SSM/hybrid/VLM) and encoder-decoder (audio)
+families behind three entry points:
+
+* ``forward(params, cfg, batch)``        — full-sequence logits (training)
+* ``prefill(params, cfg, batch, cache)`` — build caches, return last logits
+* ``decode_step(params, cfg, tok, cache)`` — one token with cache
+
+Layers inside a group run under ``lax.scan`` over stacked parameters (flat
+HLO regardless of depth) with optional ``jax.checkpoint`` remat.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import attention as attn_mod
+from . import blocks
+from repro.parallel import ctx as pctx
+from .common import apply_norm, dtype_of, init_dense, norm_params, sinusoidal_pos
+from repro.configs.base import LayerSpec, ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+def _group_params(key, spec: LayerSpec, cfg: ModelConfig, dtype):
+    keys = jax.random.split(key, spec.count)
+    return jax.vmap(lambda k: blocks.block_params(k, spec, cfg, dtype))(keys)
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    dtype = dtype_of(cfg.param_dtype)
+    n_groups = len(cfg.layers) + len(cfg.encoder_layers)
+    ks = jax.random.split(key, n_groups + 4)
+    p: dict[str, Any] = {
+        "embed": init_dense(ks[0], (cfg.vocab_size, cfg.d_model), (1,), dtype),
+        "final_norm": norm_params(cfg.d_model, cfg.use_layernorm, dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = init_dense(ks[1], (cfg.d_model, cfg.vocab_size), (0,), dtype)
+    if cfg.learned_pos_embed:
+        p["pos_embed"] = init_dense(ks[2], (max(cfg.decoder_len, 1), cfg.d_model),
+                                    (1,), dtype)
+    ki = 4
+    if cfg.encoder_layers:
+        p["enc"] = [_group_params(ks[ki + i], s, cfg, dtype)
+                    for i, s in enumerate(cfg.encoder_layers)]
+        ki += len(cfg.encoder_layers)
+        p["enc_norm"] = norm_params(cfg.d_model, cfg.use_layernorm, dtype)
+    p["dec"] = [_group_params(ks[ki + i], s, cfg, dtype)
+                for i, s in enumerate(cfg.layers)]
+    return p
+
+
+def abstract_params(cfg: ModelConfig):
+    """ShapeDtypeStruct pytree — used by the dry-run (no allocation)."""
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def param_count(cfg: ModelConfig) -> int:
+    tree = abstract_params(cfg)
+    return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(tree))
+
+
+# ---------------------------------------------------------------------------
+# Group scan
+# ---------------------------------------------------------------------------
+
+def _scan_group(gp, spec: LayerSpec, cfg: ModelConfig, x, positions,
+                cache=None, enc_out=None):
+    windows = jnp.asarray(spec.window_list(), jnp.int32)
+
+    def body(carry, xs):
+        h = carry
+        if cache is None:
+            lp, w = xs
+            lc = None
+        else:
+            lp, w, lc = xs
+        h, new_lc, aux = blocks.block_forward(lp, spec, cfg, h, positions,
+                                              cache=lc, window=w, enc_out=enc_out)
+        return h, (new_lc, aux)
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    xs = (gp, windows) if cache is None else (gp, windows, cache)
+    x, (new_cache, aux) = jax.lax.scan(body, x, xs)
+    return x, (None if cache is None else new_cache), jnp.sum(aux)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+def _embed_tokens(p, cfg, tokens, positions):
+    x = p["embed"][tokens]  # (B, S, D)
+    if cfg.learned_pos_embed:
+        x = x + p["pos_embed"][positions]
+    x = pctx.shard(x, pctx.BATCH, None, None)
+    return x.astype(dtype_of(cfg.activation_dtype))
+
+
+def _blend_patches(x, patch_embeds):
+    """VLM stub frontend: precomputed patch embeddings replace the first
+    n_patches positions of the sequence (prefix-image layout)."""
+    npatch = patch_embeds.shape[1]
+    return jnp.concatenate([patch_embeds.astype(x.dtype), x[:, npatch:]], axis=1)
+
+
+def _head(p, cfg, x):
+    x = apply_norm(p["final_norm"], x, cfg.norm_eps, cfg.use_layernorm)
+    w = p["embed"].T if cfg.tie_embeddings else p["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, w).astype(jnp.float32)
+    logits = pctx.shard(logits, pctx.BATCH, None, pctx.MODEL)
+    if cfg.logit_softcap > 0:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Encoder (audio frontend stub: batch carries frame embeddings directly)
+# ---------------------------------------------------------------------------
+
+def encode(p, cfg: ModelConfig, frames):
+    """frames: (B, S_enc, D) precomputed frame embeddings (frontend stub)."""
+    x = frames.astype(dtype_of(cfg.activation_dtype))
+    x = x + sinusoidal_pos(x.shape[1], cfg.d_model, x.dtype)[None]
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1], dtype=jnp.int32),
+                                 x.shape[:2])
+    for gp, spec in zip(p["enc"], cfg.encoder_layers):
+        x, _, _ = _scan_group(gp, spec, cfg, x, positions)
+    return apply_norm(p["enc_norm"], x, cfg.norm_eps, cfg.use_layernorm)
+
+
+# ---------------------------------------------------------------------------
+# Decoder forward (training: no cache)
+# ---------------------------------------------------------------------------
+
+def forward(p, cfg: ModelConfig, batch: dict):
+    """batch: tokens (B,S) [+ frames (B,S_enc,D) | patch_embeds (B,P,D)].
+    Returns (logits (B,S,V) fp32, aux_loss)."""
+    tokens = batch["tokens"]
+    positions = jnp.broadcast_to(jnp.arange(tokens.shape[1], dtype=jnp.int32),
+                                 tokens.shape)
+    x = _embed_tokens(p, cfg, tokens, positions)
+    if cfg.frontend == "vision_patches":
+        x = _blend_patches(x, batch["patch_embeds"])
+    enc_out = encode(p, cfg, batch["frames"]) if cfg.is_encoder_decoder else None
+    aux_total = jnp.zeros((), jnp.float32)
+    for gp, spec in zip(p["dec"], cfg.layers):
+        x, _, aux = _scan_group(gp, spec, cfg, x, positions, enc_out=enc_out)
+        aux_total = aux_total + aux
+    return _head(p, cfg, x), aux_total
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+def group_kv_len(spec: LayerSpec, kv_len: int) -> int:
+    """Per-group cache depth: a purely sliding-window group only ever needs
+    its largest window (rolling cache); any full-attention layer in the
+    group forces the full length. Keeping window-homogeneous groups in the
+    config (e.g. hymba's 3 global + 29 SWA layers) is what makes long
+    contexts cheap (§Perf iteration 1: 512× smaller SWA caches)."""
+    ws = spec.window_list()
+    if any(w == 0 for w in ws):
+        return kv_len
+    return min(max(ws), kv_len)
+
+
+def init_cache(cfg: ModelConfig, batch: int, kv_len: int, enc_len: int = 0):
+    """Cache pytree: per-group stacked layer caches + global position."""
+    dtype = dtype_of(cfg.activation_dtype)
+
+    def group_cache(spec: LayerSpec):
+        gkv = group_kv_len(spec, kv_len)
+
+        def one(_):
+            return blocks.init_layer_cache(spec, cfg, batch, gkv, dtype,
+                                           enc_len)
+        return jax.vmap(one)(jnp.arange(spec.count))
+
+    return {
+        "pos": jnp.zeros((), jnp.int32),
+        "groups": [group_cache(s) for s in cfg.layers],
+    }
+
+
+def _precompute_cross(p, cfg, cache, enc_out):
+    """Fill cross-attention K/V from encoder states (once, at prefill)."""
+    for gi, spec in enumerate(cfg.layers):
+        if not spec.cross_attn:
+            continue
+        gp = p["dec"][gi]
+
+        def kv_of(lp):
+            k = jnp.einsum("bsd,dhk->bshk", enc_out, lp["cross"]["wk"])
+            v = jnp.einsum("bsd,dhk->bshk", enc_out, lp["cross"]["wv"])
+            if "bk" in lp["cross"]:
+                k = k + lp["cross"]["bk"]
+                v = v + lp["cross"]["bv"]
+            return k, v
+
+        k, v = jax.vmap(kv_of)(gp)
+        cache["groups"][gi]["cross_k"] = k.astype(dtype_of(cfg.activation_dtype))
+        cache["groups"][gi]["cross_v"] = v.astype(dtype_of(cfg.activation_dtype))
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Prefill / decode
+# ---------------------------------------------------------------------------
+
+def prefill(p, cfg: ModelConfig, batch: dict, cache):
+    """Run the prompt through the decoder, writing caches.
+    Returns (logits of last position (B,V), cache)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    if cfg.is_encoder_decoder:
+        enc_out = encode(p, cfg, batch["frames"])
+        cache = _precompute_cross(p, cfg, cache, enc_out)
+    x = _embed_tokens(p, cfg, tokens, positions)
+    if cfg.frontend == "vision_patches":
+        x = _blend_patches(x, batch["patch_embeds"])
+    new_groups = []
+    for gp, spec, gc in zip(p["dec"], cfg.layers, cache["groups"]):
+        x, gc_new, _ = _scan_group(gp, spec, cfg, x, positions, cache=gc)
+        new_groups.append(gc_new)
+    logits = _head(p, cfg, x[:, -1:])[:, 0]
+    return logits, {"pos": jnp.asarray(s, jnp.int32), "groups": new_groups}
+
+
+def decode_step(p, cfg: ModelConfig, token, cache):
+    """token: (B,) int32. Returns (logits (B,V), cache)."""
+    b = token.shape[0]
+    pos = cache["pos"]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    x = _embed_tokens(p, cfg, token[:, None], positions)
+    new_groups = []
+    for gp, spec, gc in zip(p["dec"], cfg.layers, cache["groups"]):
+        x, gc_new, _ = _scan_group(gp, spec, cfg, x, positions, cache=gc)
+        new_groups.append(gc_new)
+    logits = _head(p, cfg, x)[:, 0]
+    return logits, {"pos": pos + 1, "groups": new_groups}
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def lm_loss(p, cfg: ModelConfig, batch: dict, aux_weight: float = 0.01):
+    """Causal-LM cross-entropy (+ MoE aux). Returns (loss, metrics) where
+    metrics carries per-example NLL/entropy — the interestingness hook."""
+    logits, aux = forward(p, cfg, batch)
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    labels_safe = jnp.maximum(labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels_safe[..., None], axis=-1)[..., 0]
+    nll = (lse - gold) * mask
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = nll.sum() / denom + aux_weight * aux
+    per_example_nll = nll.sum(-1) / jnp.maximum(mask.sum(-1), 1.0)
+    metrics = {
+        "loss": nll.sum() / denom,
+        "aux_loss": aux,
+        "per_example_nll": per_example_nll,
+        "tokens": mask.sum(),
+    }
+    return loss, metrics

@@ -1,0 +1,173 @@
+"""Mamba-2 SSD (state-space duality) mixer — chunked training scan and O(1)
+decode (arXiv:2405.21060), in pure JAX.
+
+Training uses the block-decomposition: within a chunk the output is a masked
+(causal, decay-weighted) quadratic form; across chunks a short ``lax.scan``
+carries the (H, hd, N) state. Decode is the diagonal recurrence
+``s ← a·s + dt·B⊗x`` per step.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import init_dense, rmsnorm
+from repro.parallel import ctx as pctx
+
+
+def ssm_params(key, cfg, dtype):
+    d = cfg.d_model
+    di = cfg.ssm_d_inner
+    h = cfg.ssm_heads
+    n = cfg.ssm_state
+    ng = cfg.ssm_ngroups
+    conv_dim = di + 2 * ng * n
+    ks = jax.random.split(key, 4)
+    return {
+        # order: [z (gate), x, B, C, dt]
+        "w_in": init_dense(ks[0], (d, 2 * di + 2 * ng * n + h), (0,), dtype),
+        "conv_w": init_dense(ks[1], (cfg.ssm_conv_width, conv_dim), (0,), dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "a_log": jnp.zeros((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "out_norm": jnp.zeros((di,), dtype),
+        "w_out": init_dense(ks[2], (di, d), (0,), dtype),
+    }
+
+
+def _split_in(p, x, cfg):
+    di, h, n, ng = cfg.ssm_d_inner, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_ngroups
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["w_in"])
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di: 2 * di + 2 * ng * n]
+    dt = zxbcdt[..., 2 * di + 2 * ng * n:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, conv_w, conv_b, state=None):
+    """Depthwise causal conv, width K. state: (B, K-1, C) carries history."""
+    kw = conv_w.shape[0]
+    if state is None:
+        pad = jnp.zeros(xbc.shape[:1] + (kw - 1,) + xbc.shape[2:], xbc.dtype)
+    else:
+        pad = state
+    full = jnp.concatenate([pad, xbc], axis=1)  # (B, K-1+S, C)
+    out = sum(full[:, i: i + xbc.shape[1]] * conv_w[i] for i in range(kw))
+    out = jax.nn.silu(out + conv_b)
+    new_state = full[:, -(kw - 1):] if kw > 1 else pad
+    return out, new_state
+
+
+def _heads(xbc, dt, p, cfg):
+    di, h, n, ng = cfg.ssm_d_inner, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_ngroups
+    hd = cfg.ssm_head_dim
+    xh = xbc[..., :di].reshape(xbc.shape[:-1] + (h, hd))
+    b = xbc[..., di: di + ng * n].reshape(xbc.shape[:-1] + (ng, n))
+    c = xbc[..., di + ng * n:].reshape(xbc.shape[:-1] + (ng, n))
+    # broadcast groups over heads
+    rep = h // ng
+    b = jnp.repeat(b, rep, axis=-2)
+    c = jnp.repeat(c, rep, axis=-2)
+    xh = pctx.shard(xh, pctx.BATCH, None, pctx.MODEL, None)
+    b = pctx.shard(b, pctx.BATCH, None, pctx.MODEL, None)
+    c = pctx.shard(c, pctx.BATCH, None, pctx.MODEL, None)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    a = -jnp.exp(p["a_log"])  # (H,)
+    log_decay = dt * a  # (B,S,H)  = log of per-step decay (negative)
+    return xh, b, c, dt, log_decay
+
+
+class SSMState(NamedTuple):
+    state: jax.Array  # (B, H, hd, N) float32
+    conv: jax.Array  # (B, K-1, conv_dim)
+
+
+def init_ssm_state(batch, cfg, dtype):
+    return SSMState(
+        state=jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+                        jnp.float32),
+        conv=jnp.zeros((batch, cfg.ssm_conv_width - 1,
+                        cfg.ssm_d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state),
+                       dtype),
+    )
+
+
+def ssd_chunked(xh, b, c, dt, log_decay, chunk: int, init_state=None):
+    """Chunked SSD scan. xh: (B,S,H,hd) b,c: (B,S,H,N) dt/log_decay: (B,S,H).
+    Returns (y: (B,S,H,hd), final_state: (B,H,hd,N))."""
+    bsz, s, h, hd = xh.shape
+    n = b.shape[-1]
+    pad = (-s) % chunk
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        log_decay = jnp.pad(log_decay, ((0, 0), (0, pad), (0, 0)))
+    nc = xh.shape[1] // chunk
+    # reshape to (B, nc, Q, ...)
+    rs = lambda t: t.reshape((bsz, nc, chunk) + t.shape[2:])
+    xh, b, c, dt, ld = map(rs, (xh, b, c, dt, log_decay))
+    xdt = xh.astype(jnp.float32) * dt[..., None]  # dt-weighted input
+    cs = jnp.cumsum(ld, axis=2)  # (B,nc,Q,H) cumulative log decay within chunk
+    total = cs[:, :, -1]  # (B,nc,H)
+    # --- intra-chunk (quadratic, causal, decay-masked) ---
+    # decay[t,s] = exp(cs[t] - cs[s]) for s<=t
+    diff = cs[:, :, :, None, :] - cs[:, :, None, :, :]  # (B,nc,Q,Q,H)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.where(causal[None, None, :, :, None], jnp.exp(diff), 0.0)
+    cb = jnp.einsum("bnqhs,bnkhs->bnqkh", c.astype(jnp.float32),
+                    b.astype(jnp.float32))  # (B,nc,Q,Q,H)
+    y_intra = jnp.einsum("bnqkh,bnqkh,bnkhd->bnqhd", cb, decay, xdt)
+    # --- chunk states: S_n = Σ_s exp(total - cs[s]) · b[s] ⊗ xdt[s] ---
+    w_state = jnp.exp(total[:, :, None] - cs)  # (B,nc,Q,H)
+    chunk_states = jnp.einsum("bnqh,bnqhs,bnqhd->bnhds", w_state,
+                              b.astype(jnp.float32), xdt)  # (B,nc,H,hd,N)
+    # --- inter-chunk recurrence ---
+    if init_state is None:
+        init_state = jnp.zeros((bsz, h, hd, n), jnp.float32)
+
+    def body(carry, xs):
+        st_in = carry
+        tot, new_state = xs  # (B,H), (B,H,hd,N)
+        st_out = jnp.exp(tot)[:, :, None, None] * st_in + new_state
+        return st_out, st_in  # emit the state *entering* the chunk
+
+    final, entered = jax.lax.scan(
+        body, init_state, (jnp.moveaxis(total, 1, 0), jnp.moveaxis(chunk_states, 1, 0)))
+    entered = jnp.moveaxis(entered, 0, 1)  # (B,nc,H,hd,N)
+    # --- inter-chunk contribution: y[t] += exp(cs[t]) · C[t] · S_entered ---
+    y_inter = jnp.einsum("bnqh,bnqhs,bnhds->bnqhd", jnp.exp(cs),
+                         c.astype(jnp.float32), entered)
+    y = (y_intra + y_inter).reshape(bsz, nc * chunk, h, hd)[:, :s]
+    return y, final
+
+
+def ssm_forward(p, x, cfg, state: SSMState | None = None, *, return_state=False):
+    """Full sequence forward. x: (B,S,D). If ``state`` is given it is the
+    carried recurrence (decode path uses S=1)."""
+    z, xbc, dt = _split_in(p, x, cfg)
+    conv_state = state.conv if state is not None else None
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xh, b, c, dt, log_decay = _heads(xbc, dt, p, cfg)
+    init = state.state if state is not None else None
+    if x.shape[1] == 1 and state is not None:
+        # O(1) decode: s ← a·s + dt·B⊗x
+        a = jnp.exp(log_decay[:, 0])  # (B,H)
+        sx = a[:, :, None, None] * state.state + jnp.einsum(
+            "bhs,bhd->bhds", b[:, 0].astype(jnp.float32),
+            (xh[:, 0].astype(jnp.float32) * dt[:, 0, :, None]))
+        y = jnp.einsum("bhs,bhds->bhd", c[:, 0].astype(jnp.float32), sx)[:, None]
+        final = sx
+    else:
+        y, final = ssd_chunked(xh, b, c, dt, log_decay, cfg.ssm_chunk, init)
+    y = y + xh.astype(jnp.float32) * p["d_skip"][:, None]
+    y = y.reshape(x.shape[:2] + (cfg.ssm_d_inner,)).astype(x.dtype)
+    y = rmsnorm(y, p["out_norm"], cfg.norm_eps) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"])
+    if return_state:
+        return out, SSMState(state=final, conv=new_conv)
+    return out, None

@@ -1,0 +1,2 @@
+from . import adamw, schedules  # noqa: F401
+from .adamw import AdamWState  # noqa: F401

@@ -1,0 +1,26 @@
+"""LR schedules (pure functions of step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine(step, *, peak_lr, warmup_steps, total_steps, min_ratio=0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+    t = jnp.clip((step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1),
+                 0.0, 1.0)
+    cos = peak_lr * (min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+    return jnp.where(step < warmup_steps, warm, cos)
+
+
+def wsd(step, *, peak_lr, warmup_steps, total_steps, decay_frac=0.1,
+        min_ratio=0.0):
+    """Warmup-stable-decay."""
+    step = jnp.asarray(step, jnp.float32)
+    decay_start = total_steps * (1 - decay_frac)
+    warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+    t = jnp.clip((step - decay_start) / jnp.maximum(total_steps - decay_start, 1),
+                 0.0, 1.0)
+    dec = peak_lr * (1 - (1 - min_ratio) * t)
+    out = jnp.where(step < warmup_steps, warm, peak_lr)
+    return jnp.where(step > decay_start, dec, out)

@@ -1,0 +1,117 @@
+"""Mesh context + activation sharding constraints.
+
+Models stay mesh-agnostic: they call ``shard(x, BATCH, None, MODEL, ...)``
+with logical axis markers; if no mesh is active (CPU tests) this is the
+identity. Markers resolve to mesh axes only where the dimension divides the
+axis size — so KV=8 heads on a 16-way model axis silently fall back to
+replicated instead of failing to lower.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+BATCH = "@batch"   # data-parallel axes: ('pod','data') when present
+MODEL = "@model"   # tensor-parallel axis
+SEQ = "@seq"       # sequence-parallel: ('data','model') — long-context B=1
+_STATE = threading.local()
+
+
+def set_mesh(mesh: Optional[Mesh]):
+    _STATE.mesh = mesh
+
+
+def get_mesh() -> Optional[Mesh]:
+    return getattr(_STATE, "mesh", None)
+
+
+class use_mesh:
+    def __init__(self, mesh: Mesh):
+        self.mesh = mesh
+
+    def __enter__(self):
+        self.prev = get_mesh()
+        set_mesh(self.mesh)
+        return self.mesh
+
+    def __exit__(self, *exc):
+        set_mesh(self.prev)
+
+
+def dp_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def tp_size() -> int:
+    """Size of the tensor-parallel axis of the active mesh (1 if none)."""
+    mesh = get_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
+        return 1
+    return int(mesh.shape["model"])
+
+
+def axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    s = 1
+    for a in axes:
+        s *= mesh.shape[a]
+    return s
+
+
+def resolve(mesh: Mesh, marker, dim_size: int):
+    """Marker → concrete mesh axes (or None if indivisible/absent)."""
+    if marker is None:
+        return None
+    if marker == BATCH:
+        axes = dp_axes(mesh)
+    elif marker == MODEL:
+        axes = ("model",) if "model" in mesh.axis_names else ()
+    elif marker == SEQ:
+        axes = tuple(a for a in ("data", "model") if a in mesh.axis_names)
+    else:  # explicit axis name(s)
+        axes = (marker,) if isinstance(marker, str) else tuple(marker)
+        axes = tuple(a for a in axes if a in mesh.axis_names)
+    if not axes:
+        return None
+    if dim_size % axis_size(mesh, axes) != 0:
+        # try a shrinking prefix (e.g. B=16 on pod×data=32 → data only)
+        for cut in range(len(axes) - 1, 0, -1):
+            if dim_size % axis_size(mesh, axes[:cut]) == 0:
+                return axes[:cut] if len(axes[:cut]) > 1 else axes[0]
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def spec(mesh: Mesh, markers, shape) -> P:
+    entries = []
+    used: set = set()
+    for marker, dim in zip(markers, shape):
+        r = resolve(mesh, marker, dim)
+        # an axis may appear only once in a PartitionSpec
+        raxes = (r,) if isinstance(r, str) else (r or ())
+        if r is not None and not (set(raxes) & used):
+            used.update(raxes)
+            entries.append(r)
+        else:
+            entries.append(None)
+    return P(*entries)
+
+
+def shard(x, *markers):
+    """with_sharding_constraint under the active mesh (identity otherwise)."""
+    mesh = get_mesh()
+    if mesh is None:
+        return x
+    assert len(markers) == x.ndim, (markers, x.shape)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec(mesh, markers, x.shape)))
+
+
+def named(mesh: Mesh, markers, shape) -> NamedSharding:
+    return NamedSharding(mesh, spec(mesh, markers, shape))

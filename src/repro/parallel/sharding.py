@@ -1,0 +1,193 @@
+"""Parameter / optimizer / cache / batch sharding rules.
+
+Policy (DESIGN.md §5): tensor-parallel (TP) over ``model`` on the feature
+axis (attention heads, FFN hidden, experts, vocab); FSDP over ``data`` on
+the other large axis — params *and* fp32 AdamW moments are fully
+distributed, which is what lets 236B/314B-param archs fit 16 GB/chip.
+Activations: batch over ``(pod, data)``; caches follow KV-head TP when the
+head count divides, else sequence-sharding.
+
+Rules are (leaf-name → logical markers); markers resolve against the mesh
+with divisibility fallback (ctx.resolve), so one rule table serves every
+arch × mesh combination.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from . import ctx
+from .ctx import BATCH, MODEL
+
+FSDP = "data"  # parameter-sharding axis
+TP = "model"
+
+# leaf name → markers for the *unstacked* param shape (layer-stack dim is
+# prepended automatically for grouped params).
+_PARAM_RULES: dict[str, tuple] = {
+    "embed": (TP, FSDP),
+    "lm_head": (FSDP, TP),
+    "pos_embed": (None, None),
+    # attention
+    "wq": (FSDP, TP, None),
+    "wk": (FSDP, TP, None),
+    "wv": (FSDP, TP, None),
+    "wo": (TP, None, FSDP),
+    "bq": (TP, None),
+    "bk": (TP, None),
+    "bv": (TP, None),
+    "bo": (None,),
+    # MLA
+    "wq_a": (FSDP, TP),
+    "q_norm": (None,),
+    "wq_b": (FSDP, TP, None),
+    "wkv_a": (FSDP, None),
+    "kv_norm": (None,),
+    "wkv_b": (FSDP, TP, None),
+    # dense ffn (2D) / moe experts (3D) share names — see _spec_for
+    "w_up": (FSDP, TP),
+    "w_gate": (FSDP, TP),
+    "w_down": (TP, FSDP),
+    "b_up": (TP,),
+    "b_down": (None,),
+    "router": (FSDP, None),
+    # ssm
+    "w_in": (FSDP, TP),
+    "conv_w": (None, None),
+    "conv_b": (None,),
+    "a_log": (None,),
+    "dt_bias": (None,),
+    "d_skip": (None,),
+    "out_norm": (None,),
+    "w_out": (TP, FSDP),
+    # norms
+    "scale": (None,),
+    "bias": (None,),
+}
+
+_EXPERT_RULES = {  # 3D (E, D, F) / (E, F, D) variants
+    "w_up": (TP, FSDP, None),
+    "w_gate": (TP, FSDP, None),
+    "w_down": (TP, None, FSDP),
+}
+_EXPERT_FALLBACK = {  # E doesn't divide 'model' → TP over the hidden dim
+    "w_up": (None, FSDP, TP),
+    "w_gate": (None, FSDP, TP),
+    "w_down": (None, TP, FSDP),
+}
+
+
+def _leaf_name(path) -> str:
+    for e in reversed(path):
+        if hasattr(e, "key"):
+            return str(e.key)
+        if hasattr(e, "name"):
+            return str(e.name)
+    return ""
+
+
+def _is_stacked(path) -> bool:
+    head = path[0]
+    return getattr(head, "key", None) in ("dec", "enc")
+
+
+def _spec_for(mesh: Mesh, path, leaf, fsdp: bool = True) -> P:
+    name = _leaf_name(path)
+    shape = leaf.shape
+    stacked = _is_stacked(path)
+    core = shape[1:] if stacked else shape
+    if name in ("w_up", "w_gate", "w_down") and len(core) == 3:
+        tp_size = mesh.shape.get("model", 1)
+        rules = _EXPERT_RULES if core[0] % tp_size == 0 else _EXPERT_FALLBACK
+        markers = rules[name]
+    elif name in _PARAM_RULES:
+        markers = _PARAM_RULES[name]
+        if len(markers) != len(core):  # e.g. scale under vmap oddities
+            markers = (None,) * len(core)
+    else:
+        markers = (None,) * len(core)
+    if not fsdp:
+        # decode mode: FSDP weight-gathers cost a full parameter all-gather
+        # per generated token (nothing amortizes them) — weights stay
+        # TP/EP-sharded only (§Perf iteration: starcoder2 decode_32k)
+        markers = tuple(None if m == FSDP else m for m in markers)
+    if stacked:
+        markers = (None,) + tuple(markers)
+    return ctx.spec(mesh, markers, shape)
+
+
+def param_shardings(mesh: Mesh, params_tree, fsdp: bool = True) -> Any:
+    """NamedSharding pytree matching ``params_tree`` (concrete or abstract)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, _spec_for(mesh, path, leaf,
+                                                         fsdp=fsdp)),
+        params_tree)
+
+
+def opt_shardings(mesh: Mesh, opt_tree) -> Any:
+    """AdamW moments mirror their parameter's sharding; step is replicated."""
+
+    def f(path, leaf):
+        # paths look like .m.<param path> / .v.<param path> / .step
+        if _leaf_name(path) == "step" or leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        sub = path[1:]  # drop the m/v level
+        return NamedSharding(mesh, _spec_for(mesh, sub, leaf))
+
+    return jax.tree_util.tree_map_with_path(f, opt_tree)
+
+
+# ---------------------------------------------------------------------------
+# Batch & cache shardings
+# ---------------------------------------------------------------------------
+
+def batch_shardings(mesh: Mesh, batch_tree) -> Any:
+    def f(leaf):
+        markers = (BATCH,) + (None,) * (leaf.ndim - 1)
+        return ctx.named(mesh, markers, leaf.shape)
+    return jax.tree.map(f, batch_tree)
+
+
+def cache_shardings(mesh: Mesh, cache_tree) -> Any:
+    """Decode caches. Layout (stack, B, W, heads?, dim?) — prefer B over the
+    dp axes and heads over `model`; fall back to sharding the sequence (W)
+    over whatever remains (long-context B=1 shards W over data×model)."""
+    tp = mesh.shape.get("model", 1)
+    dp = ctx.axis_size(mesh, ctx.dp_axes(mesh))
+
+    def f(path, leaf):
+        name = _leaf_name(path)
+        shape = leaf.shape
+        if leaf.ndim == 0 or name == "pos" and leaf.ndim <= 1:
+            return NamedSharding(mesh, P())
+        if name in ("k", "v", "cross_k", "cross_v"):  # (L,B,W,KV,hd)
+            kv = shape[3]
+            if kv % tp == 0:
+                markers = (None, BATCH, None, MODEL, None)
+            else:
+                markers = (None, BATCH, MODEL, None, None)
+            if shape[1] < dp:  # B too small — shard the sequence harder
+                markers = (None, None, ctx.SEQ, None, None)
+            return ctx.named(mesh, markers, shape)
+        if name == "ckv" or name == "krope":  # (L,B,W,R)
+            markers = (None, BATCH, MODEL, None)
+            if shape[1] < dp:
+                markers = (None, None, ctx.SEQ, None)
+            return ctx.named(mesh, markers, shape)
+        if name == "pos":  # (L,B,W)
+            return ctx.named(mesh, (None, BATCH, None), shape)
+        if name == "state":  # (L,B,H,hd,N)
+            return ctx.named(mesh, (None, BATCH, MODEL, None, None), shape)
+        if name == "conv":  # (L,B,K-1,C)
+            return ctx.named(mesh, (None, BATCH, None, MODEL), shape)
+        markers = (None, BATCH) + (None,) * (leaf.ndim - 2)
+        return ctx.named(mesh, markers[: leaf.ndim], shape)
+
+    return jax.tree_util.tree_map_with_path(f, cache_tree)
+
+
+def replicated(mesh: Mesh, tree) -> Any:
+    return jax.tree.map(lambda l: NamedSharding(mesh, P()), tree)

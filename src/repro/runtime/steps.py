@@ -1,0 +1,126 @@
+"""Shared step functions: train / prefill / decode — used by the real
+training loop, the serving loop, and the multi-pod dry-run (lowered with
+abstract inputs there).
+
+The paper's feature is wired in here: every train step scores each example
+(interestingness = per-example NLL) and merges the batch into the SHP top-K
+reservoir *inside* jit — the reservoir state is part of the carried train
+state, so curation costs one (tiny) top-k merge per step.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import topk as topk_mod
+from repro.models import lm
+from repro.optim import adamw
+
+
+class TrainState(NamedTuple):
+    params: dict
+    opt: adamw.AdamWState
+    step: jax.Array  # () int32 global step
+    reservoir: topk_mod.ReservoirState  # SHP top-K over example NLL
+    score_ema: jax.Array  # () f32 — EMA of mean NLL (relative scoring)
+
+
+def init_train_state(cfg, key, reservoir_k: int = 1024) -> TrainState:
+    params = lm.init_params(cfg, key)
+    return TrainState(params=params, opt=adamw.init(params),
+                      step=jnp.zeros((), jnp.int32),
+                      reservoir=topk_mod.init(reservoir_k),
+                      score_ema=jnp.zeros((), jnp.float32))
+
+
+def abstract_train_state(cfg, reservoir_k: int = 1024):
+    return jax.eval_shape(lambda: init_train_state(cfg, jax.random.PRNGKey(0),
+                                                   reservoir_k))
+
+
+def train_step(state: TrainState, batch: dict, cfg, *, lr: float = 3e-4,
+               aux_weight: float = 0.01, grad_clip: float = 1.0,
+               microbatches: int = 1, score_mode: str = "nll"):
+    """One optimizer step + reservoir merge. batch must carry
+    ``example_ids`` (B,) int32 global stream indices for the reservoir.
+
+    ``microbatches > 1`` runs gradient accumulation under ``lax.scan``: the
+    remat-saved activation stack shrinks by the microbatch factor (the
+    fits-in-HBM lever for the 100B+ train cells, §Perf iteration 3c) at the
+    cost of re-streaming weights per microbatch."""
+    if microbatches > 1:
+        b = batch["tokens"].shape[0]
+        assert b % microbatches == 0, (b, microbatches)
+
+        def reshape(x):
+            return x.reshape((microbatches, b // microbatches) + x.shape[1:])
+
+        micro = jax.tree.map(reshape, batch)
+
+        def accum(carry, mb):
+            gsum, lsum, nll_parts = carry
+            (l, met), g = jax.value_and_grad(
+                lambda p: lm.lm_loss(p, cfg, mb, aux_weight), has_aux=True)(
+                    state.params)
+            gsum = jax.tree.map(lambda a, c: a + c.astype(jnp.float32), gsum, g)
+            return (gsum, lsum + l, None), (met["per_example_nll"], met["loss"])
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                          state.params)
+        (gsum, lsum, _), (nll, losses) = jax.lax.scan(
+            accum, (g0, jnp.zeros(()), None), micro)
+        grads = jax.tree.map(lambda g: g / microbatches, gsum)
+        loss = lsum / microbatches
+        metrics = {"loss": jnp.mean(losses),
+                   "aux_loss": jnp.zeros(()),
+                   "per_example_nll": nll.reshape(-1),
+                   "tokens": jnp.asarray(
+                       batch["tokens"].size, jnp.float32)}
+    else:
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: lm.lm_loss(p, cfg, batch, aux_weight), has_aux=True)(
+                state.params)
+    params, opt, gnorm = adamw.apply(state.params, grads, state.opt, lr=lr,
+                                     grad_clip=grad_clip)
+    ids = batch.get("example_ids")
+    if ids is None:
+        b = batch["tokens"].shape[0]
+        ids = state.step * b + jnp.arange(b, dtype=jnp.int32)
+    if score_mode == "nll_centered":
+        # batch-mean centering fully removes the training-loss trend and
+        # restores the SHP write law (EXPERIMENTS §Training-integration:
+        # 155-158 writes vs analytic 163, raw NLL 54-81)
+        nll = metrics["per_example_nll"]
+        scores, score_ema = nll - jnp.mean(nll), state.score_ema
+    elif score_mode == "nll_relative":
+        # EMA de-trending: keeps absolute difficulty comparable across
+        # steps; partially restores the law (≈87%)
+        from repro.core.interestingness import ema_relative
+        scores, score_ema = ema_relative(metrics["per_example_nll"],
+                                         state.score_ema, state.step)
+    else:
+        scores, score_ema = metrics["per_example_nll"], state.score_ema
+    reservoir, wrote = topk_mod.update(state.reservoir, scores, ids)
+    out_metrics = {
+        "loss": metrics["loss"], "aux_loss": metrics["aux_loss"],
+        "grad_norm": gnorm, "tokens": metrics["tokens"],
+        "reservoir_writes": wrote.sum(),
+        "reservoir_threshold": topk_mod.threshold(reservoir),
+        "per_example_nll": metrics["per_example_nll"],
+        "wrote_mask": wrote,
+    }
+    new_state = TrainState(params=params, opt=opt, step=state.step + 1,
+                           reservoir=reservoir, score_ema=score_ema)
+    return new_state, out_metrics
+
+
+def prefill_step(params, batch: dict, cache, cfg):
+    return lm.prefill(params, cfg, batch, cache)
+
+
+def decode_step(params, token, cache, cfg):
+    return lm.decode_step(params, cfg, token, cache)

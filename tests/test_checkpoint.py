@@ -1,0 +1,75 @@
+"""Checkpoint manager: atomic roundtrip, retention, tiering, async."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.core.placement import Policy
+
+
+def make_state(x: float):
+    return {"w": jnp.full((4, 3), x), "opt": {"m": jnp.full((2,), x * 2)},
+            "step": jnp.asarray(int(x), jnp.int32)}
+
+
+def test_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    state = make_state(3.0)
+    mgr.save(state, step=3, metric=0.5, blocking=True)
+    restored = mgr.restore(jax.tree.map(jnp.zeros_like, state))
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(np.asarray(a),
+                                                            np.asarray(b)),
+                 state, restored)
+
+
+def test_async_save_then_restore(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(make_state(1.0), step=1, metric=1.0)
+    mgr.wait()
+    assert mgr.latest_step() == 1
+
+
+def test_latest_and_specific_step(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_latest=10)
+    for s in (1, 2, 3):
+        mgr.save(make_state(float(s)), step=s, metric=float(s), blocking=True)
+    assert mgr.latest_step() == 3
+    st = mgr.restore(make_state(0.0), step=2)
+    assert float(st["w"][0, 0]) == 2.0
+
+
+def test_retention_keeps_latest_and_best(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_latest=1, keep_best=2,
+                            metric_mode="min")
+    metrics = {1: 5.0, 2: 0.1, 3: 4.0, 4: 0.2, 5: 9.0}
+    for s, m in metrics.items():
+        mgr.save(make_state(float(s)), step=s, metric=m, blocking=True)
+    steps = {m["step"] for m, _ in mgr._all_ckpts()}
+    assert 5 in steps  # latest
+    assert 2 in steps and 4 in steps  # two best by metric
+    assert 1 not in steps and 3 not in steps
+
+
+def test_tier_placement_by_policy(tmp_path):
+    hot = tmp_path / "hot"
+    cold = tmp_path / "cold"
+    # first 2 saves to tier A (hot), the rest to tier B (cold)
+    mgr = CheckpointManager(str(hot), cold_directory=str(cold),
+                            keep_latest=10, policy=Policy(r=2))
+    for s in range(4):
+        mgr.save(make_state(float(s)), step=s, metric=1.0, blocking=True)
+    hot_names = {d for d in os.listdir(hot) if d.startswith("ckpt_")}
+    cold_names = {d for d in os.listdir(cold) if d.startswith("ckpt_")}
+    assert len(hot_names) == 2 and len(cold_names) == 2
+
+
+def test_torn_save_is_ignored(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(make_state(1.0), step=1, metric=1.0, blocking=True)
+    # simulate a torn save: directory without manifest
+    os.makedirs(tmp_path / "ckpt_00000009")
+    assert mgr.latest_step() == 1

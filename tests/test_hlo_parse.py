@@ -1,0 +1,60 @@
+"""Trip-count-aware HLO analyzer: the roofline's foundation.
+
+Verifies (a) XLA cost_analysis really does count scan bodies once (the bug
+we correct), and (b) our analyzer multiplies by the trip count."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch import hlo_parse
+
+N_STEPS = 8
+DIM = 256
+DOT_FLOPS = 2 * DIM ** 3  # one (256,256)x(256,256) matmul
+
+
+def _scanned():
+    def body(c, _):
+        return jnp.tanh(c @ c), None
+
+    def fn(x):
+        y, _ = jax.lax.scan(body, x, None, length=N_STEPS)
+        return y.sum()
+
+    x = jnp.zeros((DIM, DIM), jnp.float32)
+    return jax.jit(fn).lower(x).compile()
+
+
+def test_xla_cost_analysis_counts_loop_once():
+    c = _scanned()
+    flops = float((c.cost_analysis() or {}).get("flops", 0))
+    assert flops < 1.5 * DOT_FLOPS  # ~1 iteration, not 8
+
+
+def test_analyzer_multiplies_by_trip_count():
+    c = _scanned()
+    cost = hlo_parse.analyze(c.as_text(), n_chips=1)
+    assert cost.flops >= 0.9 * N_STEPS * DOT_FLOPS, cost.flops
+    assert cost.flops <= 3.0 * N_STEPS * DOT_FLOPS  # fwd only, some slack
+    assert cost.unparsed_whiles == 0
+    assert cost.bytes > 0
+
+
+def test_shape_bytes():
+    assert hlo_parse.shape_bytes("bf16[6,64,128]{2,1,0}") == 6 * 64 * 128 * 2
+    assert hlo_parse.shape_bytes("(s32[], f32[8,8]{1,0})") == 4 + 256
+    assert hlo_parse.shape_bytes("token[]") == 0
+
+
+def test_collective_accounting():
+    text = """
+ENTRY %main (p: bf16[16,512]) -> bf16[16,512] {
+  %p = bf16[16,512]{1,0} parameter(0)
+  ROOT %ar = bf16[16,512]{1,0} all-reduce(%p), replica_groups={{0,1,2,3}}, to_apply=%add
+}
+"""
+    cost = hlo_parse.analyze(text, n_chips=4)
+    nbytes = 16 * 512 * 2
+    assert cost.collective_bytes["all-reduce"] == nbytes
+    # ring all-reduce: 2*(n-1)/n * S
+    assert abs(cost.collective_link_bytes - 2 * 3 / 4 * nbytes) < 1e-6

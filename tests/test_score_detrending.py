@@ -1,0 +1,91 @@
+"""EMA-relative scoring restores the SHP write law on trending streams
+(the §Training-integration finding + mitigation, beyond paper)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import shp, topk
+from repro.core.interestingness import ema_relative
+
+
+from repro.core.interestingness import batch_centered
+
+
+def run_reservoir(scores_per_batch, k, mode: str):
+    state = topk.init(k)
+    ema = jnp.zeros((), jnp.float32)
+    writes = 0
+    for step, batch_scores in enumerate(scores_per_batch):
+        s = jnp.asarray(batch_scores, jnp.float32)
+        if mode == "ema":
+            s, ema = ema_relative(s, ema, jnp.asarray(step))
+        elif mode == "centered":
+            s = batch_centered(s)
+        ids = jnp.arange(step * len(batch_scores),
+                         (step + 1) * len(batch_scores), dtype=jnp.int32)
+        state, wrote = topk.update(state, s, ids)
+        writes += int(wrote.sum())
+    return writes, state
+
+
+def _trending_stream(rng, n_batches=120, b=16, slope=-0.02, noise=1.0):
+    """Synthetic training-NLL stream: decreasing trend + i.i.d. noise —
+    mimics loss decay, violating the random-order assumption."""
+    out = []
+    t = 0
+    for _ in range(n_batches):
+        base = 10.0 + slope * t
+        out.append(base + rng.standard_normal(b) * noise)
+        t += b
+    return out
+
+
+def test_raw_nll_underwrites_but_detrended_matches_analytic():
+    rng = np.random.default_rng(0)
+    k = 32
+    trials = 5
+    raw_w, cen_w, ema_w = [], [], []
+    n = None
+    for _ in range(trials):
+        stream = _trending_stream(rng)
+        n = sum(len(s) for s in stream)
+        raw_w.append(run_reservoir(stream, k, "raw")[0])
+        cen_w.append(run_reservoir(stream, k, "centered")[0])
+        ema_w.append(run_reservoir(stream, k, "ema")[0])
+    analytic = float(shp.expected_cum_writes(n - 1, k))
+    raw, cen, ema = np.mean(raw_w), np.mean(cen_w), np.mean(ema_w)
+    # trend biases raw scoring far below the law
+    assert raw < 0.6 * analytic, (raw, analytic)
+    # batch-mean centering restores the law
+    assert abs(cen - analytic) / analytic < 0.15, (cen, analytic)
+    # EMA de-trending is in between (lags the trend)
+    assert raw < ema, (raw, ema)
+
+
+def test_detrending_is_noop_on_stationary_stream():
+    """On an already-random stream all modes obey the law."""
+    rng = np.random.default_rng(3)
+    k = 16
+    stream = [rng.standard_normal(16) for _ in range(80)]
+    n = 80 * 16
+    analytic = float(shp.expected_cum_writes(n - 1, k))
+    for mode in ("raw", "centered", "ema"):
+        w, _ = run_reservoir(stream, k, mode)
+        assert abs(w - analytic) / analytic < 0.3, (mode, w, analytic)
+
+
+def test_train_step_score_mode_wiring():
+    """score_mode='nll_relative' updates the EMA in TrainState."""
+    from repro import configs
+    from repro.configs.base import ShapeConfig
+    from repro.data.synthetic import make_batch
+    from repro.runtime import steps
+    cfg = configs.get_config("llama3.2-1b", reduced=True)
+    shape = ShapeConfig("t", seq_len=16, global_batch=4, kind="train")
+    batch = jax.tree.map(jnp.asarray, make_batch(cfg, shape))
+    batch["example_ids"] = jnp.arange(4, dtype=jnp.int32)
+    st = steps.init_train_state(cfg, jax.random.PRNGKey(0), reservoir_k=8)
+    st2, _ = steps.train_step(st, batch, cfg, score_mode="nll_relative")
+    assert float(st2.score_ema) != 0.0
+    st3, _ = steps.train_step(st, batch, cfg, score_mode="nll")
+    assert float(st3.score_ema) == 0.0

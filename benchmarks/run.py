@@ -1,21 +1,32 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
+# ``--json`` additionally writes one BENCH_<module>.json trajectory file per
+# module, so every bench run produces uniform machine-readable artifacts.
 import argparse
+import json
 import sys
 import traceback
 
 
-def emit(name: str, us_per_call: float, derived: str = "") -> None:
-    print(f"{name},{us_per_call:.1f},{derived}")
+def write_trajectory(name: str, rows: list, path: str | None = None) -> str:
+    """Write one BENCH_<name>.json trajectory file (the uniform format all
+    bench entry points share)."""
+    path = path or f"BENCH_{name}.json"
+    with open(path, "w") as f:
+        json.dump({"bench": name, "rows": rows}, f, indent=1)
+    return path
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="run a single module (tables|curves|fig8|writes|"
-                         "kernels|roofline)")
+                         "kernels|roofline|streams)")
+    ap.add_argument("--json", action="store_true",
+                    help="also write BENCH_<module>.json per module")
     args = ap.parse_args()
     from benchmarks import (algo_writes, fig8_trace, fig_curves,
-                            kernels_bench, paper_tables, roofline)
+                            kernels_bench, paper_tables, roofline,
+                            streams_bench)
     modules = {
         "tables": paper_tables,    # Tables I & II
         "curves": fig_curves,      # Figures 4 & 5
@@ -23,18 +34,28 @@ def main() -> None:
         "writes": algo_writes,     # eqs. 2-8
         "kernels": kernels_bench,  # Pallas-op microbench
         "roofline": roofline,      # dry-run roofline table
+        "streams": streams_bench,  # multi-tenant fleet engine throughput
     }
     failures = 0
     print("name,us_per_call,derived")
     for name, mod in modules.items():
         if args.only and name != args.only:
             continue
+        rows = []
+
+        def emit(row_name: str, us_per_call: float, derived: str = "") -> None:
+            print(f"{row_name},{us_per_call:.1f},{derived}")
+            rows.append({"name": row_name, "us_per_call": us_per_call,
+                         "derived": derived})
+
         try:
             mod.run(emit)
         except Exception as e:
             failures += 1
             emit(f"{name}.FAILED", 0.0, repr(e))
             traceback.print_exc(file=sys.stderr)
+        if args.json:
+            write_trajectory(name, rows)
     if failures:
         raise SystemExit(1)
 

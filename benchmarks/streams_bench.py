@@ -1,0 +1,79 @@
+"""Fleet-engine throughput: docs/sec of one jitted multi-stream step vs M.
+
+Times the device-side batched update (the jitted sort-merge over all
+streams) and the kernel-filtered path's algorithmic reference (the Pallas
+body itself runs in interpret mode off-TPU, so it is timed only at a token
+size for correctness, like kernels_bench). Standalone entry point emits
+``BENCH_streams.json``; also wired into ``benchmarks/run.py``.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.streams import engine
+
+K, BATCH = 16, 64
+SWEEP_M = (64, 256, 1024)
+
+
+def _time(fn, *args, reps=20):
+    jax.block_until_ready(fn(*args))  # compile
+    t0 = time.perf_counter_ns()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter_ns() - t0) / 1000.0 / reps
+
+
+def run(emit):
+    rng = np.random.default_rng(0)
+    upd = jax.jit(engine.update)
+    filt = jax.jit(lambda st, s, i: engine.filtered_update(
+        st, s, i, use_pallas=False))
+    for m in SWEEP_M:
+        state = engine.init(m, K)
+        sc = jnp.asarray(rng.standard_normal((m, BATCH)), jnp.float32)
+        ids = jnp.tile(jnp.arange(BATCH, dtype=jnp.int32), (m, 1))
+        us = _time(upd, state, sc, ids)
+        emit(f"streams.update_m{m}_k{K}_b{BATCH}", us,
+             f"{m * BATCH / us * 1e6:.0f} docs/s fused sort-merge")
+        us = _time(filt, state, sc, ids)
+        emit(f"streams.filtered_update_m{m}_k{K}_b{BATCH}", us,
+             f"{m * BATCH / us * 1e6:.0f} docs/s filter+merge (jnp ref)")
+    # Pallas body correctness-scale timing (interpret mode off-TPU)
+    state = engine.init(8, K)
+    sc = jnp.asarray(rng.standard_normal((8, 256)), jnp.float32)
+    ids = jnp.tile(jnp.arange(256, dtype=jnp.int32), (8, 1))
+    pal = jax.jit(lambda st, s, i: engine.filtered_update(st, s, i,
+                                                          block_n=128))
+    us = _time(pal, state, sc, ids, reps=3)
+    emit(f"streams.filtered_update_pallas_interpret_m8_b256", us,
+         "Pallas 2-D grid (interpret mode, correctness only)")
+
+
+def main():
+    try:
+        from benchmarks.run import write_trajectory
+    except ImportError:  # bare-script invocation: benchmarks/ is sys.path[0]
+        from run import write_trajectory
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="BENCH_streams.json",
+                    help="output trajectory file")
+    args = ap.parse_args()
+    rows = []
+
+    def emit(name, us, derived=""):
+        print(f"{name},{us:.1f},{derived}")
+        rows.append({"name": name, "us_per_call": us, "derived": derived})
+
+    run(emit)
+    print(f"wrote {write_trajectory('streams', rows, args.json)}")
+
+
+if __name__ == "__main__":
+    main()

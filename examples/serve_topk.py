@@ -6,6 +6,12 @@ per window are retained in tiered storage (hot ring buffer → cold store) at
 the placement the SHP plan chose — exactly the paper's workflow with the
 serving fleet as the producer and offline analysis as the consumer.
 
+Multi-tenant mode (``--tenants M``): requests are interleaved across M
+tenant streams, each with its own K and cost model; retention then runs
+through the batched ``repro.streams`` engine — the fleet is planned in one
+vectorized pass and every scored batch advances all tenants inside one
+jitted step.
+
 Run: PYTHONPATH=src python examples/serve_topk.py [--requests 64]
 """
 import argparse
@@ -21,6 +27,25 @@ from repro.data.curation import TopKCurator
 from repro.models import lm
 
 
+def make_tenant_engine(tenants: int, requests: int, topk: int, doc_gb: float):
+    """Heterogeneous per-tenant retention: K alternates, cost models jitter
+    the HBM/host preset, the fleet planner picks each tenant's r*."""
+    from repro.streams import StreamEngine, StreamSpec
+    # ceil: when tenants doesn't divide requests, the first tenants get one
+    # extra doc — the cost model must cover their longer stream
+    n_per = -(-requests // tenants)
+    if requests // tenants < 2:
+        raise SystemExit(f"need requests >= 2*tenants, got {requests} "
+                         f"requests for {tenants} tenants")
+    specs = []
+    for t in range(tenants):
+        k = max(1, min(topk if t % 2 == 0 else topk // 2, n_per - 1))
+        cm = costs.hbm_host_preset(n_docs=n_per, k=k, doc_gb=doc_gb,
+                                   window_seconds=30.0 * (1 + t % 4))
+        specs.append(StreamSpec(stream_id=t, k=k, cost_model=cm))
+    return StreamEngine(specs), specs
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-1b")
@@ -29,24 +54,34 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen-len", type=int, default=12)
     ap.add_argument("--topk", type=int, default=8)
+    ap.add_argument("--tenants", type=int, default=1,
+                    help=">1 routes retention through the multi-tenant "
+                         "repro.streams engine")
     args = ap.parse_args()
 
     cfg = configs.get_config(args.arch, reduced=True)
     params = lm.init_params(cfg, jax.random.PRNGKey(0))
     print(f"serving reduced {args.arch}: vocab={cfg.vocab_size}")
 
-    # proactive placement for the request-log stream
-    cm = costs.hbm_host_preset(n_docs=args.requests, k=args.topk,
-                               doc_gb=(args.prompt_len + args.gen_len) * 4 / 1e9,
-                               window_seconds=60.0)
-    plan = shp.plan_placement(cm)
-    pol = placement.from_plan(plan)
-    print(f"SHP plan for request log: {plan.strategy} "
-          f"r*/N={plan.best.r_over_n:.3f}")
-    store = tiers.TieredStore(
-        pol, tiers.HotTier(args.topk, (args.prompt_len + args.gen_len,),
-                           dtype=jnp.int32), tiers.ColdTier())
-    curator = TopKCurator(args.topk, store, policy=pol)
+    doc_gb = (args.prompt_len + args.gen_len) * 4 / 1e9
+    curator = engine = None
+    if args.tenants > 1:
+        engine, tenant_specs = make_tenant_engine(
+            args.tenants, args.requests, args.topk, doc_gb)
+        print(f"multi-tenant retention: {args.tenants} streams, "
+              f"fleet plan {engine.plan.strategy_histogram()}")
+    else:
+        # proactive placement for the request-log stream
+        cm = costs.hbm_host_preset(n_docs=args.requests, k=args.topk,
+                                   doc_gb=doc_gb, window_seconds=60.0)
+        plan = shp.plan_placement(cm)
+        pol = placement.from_plan(plan)
+        print(f"SHP plan for request log: {plan.strategy} "
+              f"r*/N={plan.best.r_over_n:.3f}")
+        store = tiers.TieredStore(
+            pol, tiers.HotTier(args.topk, (args.prompt_len + args.gen_len,),
+                               dtype=jnp.int32), tiers.ColdTier())
+        curator = TopKCurator(args.topk, store, policy=pol)
 
     prefill = jax.jit(lambda p, b, c: lm.prefill(p, cfg, b, c))
     step = jax.jit(lambda p, t, c: lm.decode_step(p, cfg, t, c))
@@ -71,18 +106,35 @@ def main():
         gen = jnp.stack(toks, 1)  # (b, gen_len)
         scores = np.asarray(ent_sum / (args.gen_len - 1))
         ids = np.arange(served, served + b)
-        payloads = np.concatenate([prompts, np.asarray(gen)], axis=1)
-        curator.observe_batch(ids, scores, payloads)
+        if engine is not None:
+            # interleave requests across tenants; doc index is per-tenant
+            engine.ingest(ids % args.tenants, scores, ids // args.tenants)
+        else:
+            payloads = np.concatenate([prompts, np.asarray(gen)], axis=1)
+            curator.observe_batch(ids, scores, payloads)
         served += b
     dt = time.time() - t0
 
     print(f"served {served} requests in {dt:.1f}s "
           f"({served * (args.prompt_len + args.gen_len) / dt:.0f} tok/s)")
-    print(f"curation: {curator.stats.as_dict()}")
-    print(f"ledger: {store.ledger.as_dict()}")
-    retained = curator.finalize()
-    print(f"top-{args.topk} most-uncertain requests retained for review: "
-          f"{sorted(retained)}")
+    if engine is not None:
+        survivors = engine.finalize()
+        rec = engine.meter.reconcile(batch=max(1, args.batch // args.tenants))
+        print(f"fleet ledger: writes actual={rec['fleet_actual']:.0f} "
+              f"expected={rec['fleet_expected']:.1f} "
+              f"mean rel err={rec['mean_rel_err']:+.2%}")
+        for t in sorted(survivors)[:4]:
+            reqs = (np.asarray(survivors[t]) * args.tenants + t).tolist()
+            print(f"tenant {t}: top-{tenant_specs[t].k} retained requests "
+                  f"{reqs}")
+        if args.tenants > 4:
+            print(f"... ({args.tenants - 4} more tenants)")
+    else:
+        print(f"curation: {curator.stats.as_dict()}")
+        print(f"ledger: {store.ledger.as_dict()}")
+        retained = curator.finalize()
+        print(f"top-{args.topk} most-uncertain requests retained for review: "
+              f"{sorted(retained)}")
 
 
 if __name__ == "__main__":

@@ -7,6 +7,10 @@ trace-driven in §VIII / our ``core.simulator``).
 
 Exact forms use harmonic partial sums; ``*_approx`` forms use the paper's
 logarithmic approximations (used by the case-study tables).
+
+``plan_placement`` decides one stream; ``repro.streams.planner.plan_fleet``
+is the vectorized fleet version (same candidates, same precedence, numpy
+arrays over M heterogeneous cost models).
 """
 from __future__ import annotations
 

@@ -3,7 +3,9 @@ hot (device HBM) / cold (host DRAM or disk) hierarchy, placing each write
 according to a `placement.Policy` (the paper's Fig. 3 loop, §VII).
 
 The ledger records every transaction and byte so real runs can be reconciled
-against the analytic expectations (and against `core.simulator`).
+against the analytic expectations (and against `core.simulator`). For a
+fleet of tenant streams, `repro.streams.metering.FleetMeter` keeps one
+ledger row per stream and reconciles them in one vectorized pass.
 """
 from __future__ import annotations
 

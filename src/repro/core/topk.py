@@ -6,6 +6,11 @@ reservoir with one sort. Deterministic tie-break: lower stream index wins.
 
 State is a pytree, so it can live donated inside a jitted train step and be
 sharded/merged across data-parallel sub-streams (``merge``).
+
+Multi-tenant variant: ``repro.streams.engine`` stacks M of these states on
+a leading stream axis and advances them in one jitted step; the kernel
+fast path for the scan is ``repro.kernels.topk_filter`` (one stream) /
+``repro.kernels.batched_topk`` (the fleet).
 """
 from __future__ import annotations
 
@@ -45,17 +50,26 @@ def update(state: ReservoirState, batch_scores: jax.Array,
 
     Returns (new_state, wrote_mask) where ``wrote_mask[j]`` is True iff batch
     element j entered the reservoir (⇒ one storage write, paper eq. 9/10).
+    Batch elements whose id is already resident are dropped — a re-observed
+    document neither duplicates its slot nor triggers a storage write.
+    Within-batch ids are assumed unique (they are stream indices).
     """
     k = state.scores.shape[0]
     batch_scores = batch_scores.astype(jnp.float32).reshape(-1)
     batch_ids = batch_ids.astype(jnp.int32).reshape(-1)
-    all_scores = jnp.concatenate([state.scores, batch_scores])
-    all_ids = jnp.concatenate([state.ids, batch_ids])
-    new_scores, new_ids = _merge_sorted(all_scores, all_ids, k)
-    # membership: ids are unique (stream indices), -1 padding never matches
-    wrote = jnp.isin(batch_ids, new_ids, assume_unique=False)
+    resident = jnp.isin(batch_ids, state.ids)
+    cand_scores = jnp.where(resident, -jnp.inf, batch_scores)
+    cand_ids = jnp.where(resident, -1, batch_ids)
+    all_scores = jnp.concatenate([state.scores, cand_scores])
+    all_ids = jnp.concatenate([state.ids, cand_ids])
+    order = jnp.lexsort((all_ids, -all_scores))
+    top = order[:k]
+    # positional membership, not id membership: an id collision with a
+    # resident entry must not report a write for the colliding batch element.
+    selected = jnp.zeros(all_ids.shape, dtype=bool).at[top].set(True)
+    wrote = selected[k:] & (cand_ids >= 0)
     new_state = ReservoirState(
-        scores=new_scores, ids=new_ids,
+        scores=all_scores[top], ids=all_ids[top],
         seen=state.seen + batch_ids.shape[0],
     )
     return new_state, wrote

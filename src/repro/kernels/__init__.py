@@ -3,6 +3,8 @@
 # CPU against the ref.py oracles:
 #   entropy_scores — fused interestingness scoring (entropy+NLL over vocab tiles)
 #   topk_filter    — streaming reservoir threshold scan (Fig. 2/3 inner loop)
+#   batched_topk   — 2-D (stream, tile) threshold scan for the multi-tenant
+#                     fleet engine in repro.streams
 #   flash_attention — fused attention (removes the S² HBM score traffic
 #                     identified as the dominant train-cell roofline term)
-from . import entropy_scores, flash_attention, topk_filter  # noqa: F401
+from . import batched_topk, entropy_scores, flash_attention, topk_filter  # noqa: F401

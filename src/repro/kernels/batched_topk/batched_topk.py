@@ -1,0 +1,59 @@
+"""Pallas TPU kernel: 2-D batched threshold filter for M concurrent streams.
+
+The multi-tenant engine (``repro.streams.engine``) maintains one reservoir
+per stream. Its hot path is the same scan as ``kernels.topk_filter`` — rank
+every arriving candidate against the reservoir "bar" (current K-th score) —
+but over a whole fleet at once: scores (M, N) against per-stream bars (M,).
+Almost all candidates fail everywhere; the rare survivors go through the
+exact per-stream merge.
+
+Grid: (M, N/bn) — one program per (stream, tile) pair. Each program reads
+its stream's bar plus one score tile from VMEM and emits the survivor mask
+and a per-(stream, tile) count and maximum, so the host-side exact merge
+only touches tiles that actually contain survivors. Embarrassingly
+parallel, bandwidth-bound — one pass over HBM regardless of M.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(scores_ref, thr_ref, mask_ref, count_ref, tmax_ref):
+    s = scores_ref[...].astype(jnp.float32)  # (1, bn)
+    thr = thr_ref[0]  # this stream's reservoir bar
+    hit = s > thr
+    mask_ref[...] = hit.astype(jnp.int8)
+    count_ref[0, 0] = hit.sum().astype(jnp.int32)
+    tmax_ref[0, 0] = s.max()
+
+
+def batched_topk_pallas(scores, thresholds, *, block_n: int = 512,
+                        interpret: bool = False):
+    """scores: (M, N) float — thresholds: (M,) float32, one bar per stream.
+    Returns (mask (M, N) int8, counts (M, N/bn) int32, tile_max (M, N/bn) f32).
+    """
+    m, n = scores.shape
+    assert n % block_n == 0, (n, block_n)
+    n_tiles = n // block_n
+    thr = thresholds.astype(jnp.float32).reshape(m)
+    return pl.pallas_call(
+        _kernel,
+        grid=(m, n_tiles),
+        in_specs=[
+            pl.BlockSpec((1, block_n), lambda i, j: (i, j)),
+            pl.BlockSpec((1,), lambda i, j: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_n), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        ],
+        out_shape=(
+            jax.ShapeDtypeStruct((m, n), jnp.int8),
+            jax.ShapeDtypeStruct((m, n_tiles), jnp.int32),
+            jax.ShapeDtypeStruct((m, n_tiles), jnp.float32),
+        ),
+        interpret=interpret,
+    )(scores, thr)

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the 2-D batched threshold filter kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def batched_topk_filter(scores, thresholds, block_n: int):
+    scores = scores.astype(jnp.float32)
+    m, n = scores.shape
+    n_tiles = n // block_n
+    thr = thresholds.astype(jnp.float32).reshape(m, 1)
+    mask = (scores > thr).astype(jnp.int8)
+    tiles = scores.reshape(m, n_tiles, block_n)
+    counts = (tiles > thr[:, :, None]).sum(axis=2).astype(jnp.int32)
+    tmax = tiles.max(axis=2)
+    return mask, counts, tmax

@@ -8,7 +8,9 @@ candidates fail, the rare survivors go through the exact (tiny) merge in
 VMEM, emitting the survivor mask plus per-tile counts and maxima (the
 maxima let the host skip entire tiles on the next refinement pass).
 
-Grid: (N/bn,) — embarrassingly parallel, bandwidth-bound.
+Grid: (N/bn,) — embarrassingly parallel, bandwidth-bound. The 2-D sibling
+``repro.kernels.batched_topk`` runs the same scan for M concurrent streams
+against per-stream bars (grid (M, N/bn)).
 """
 from __future__ import annotations
 

@@ -3,7 +3,9 @@
 Batched prefill + decode with top-K (most interesting = highest predictive
 entropy) request retention across the tiered store — the paper's workflow
 with the serving fleet as producer. Reduced configs on CPU; same entry
-point under the production mesh on hardware.
+point under the production mesh on hardware. ``--tenants M`` switches
+retention to the multi-tenant ``repro.streams`` fleet engine (one jitted
+step advances all M tenant reservoirs).
 """
 from __future__ import annotations
 
@@ -18,6 +20,8 @@ def main():
     ap.add_argument("--arch", default="llama3.2-1b")
     ap.add_argument("--requests", type=int, default=32)
     ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--tenants", type=int, default=1,
+                    help=">1 = multi-tenant retention via repro.streams")
     args, extra = ap.parse_known_args()
     import repro  # noqa: F401 — ensure PYTHONPATH is sane before spawning
     import os
@@ -25,7 +29,8 @@ def main():
         os.path.dirname(os.path.abspath(__file__)))))
     script = os.path.join(here, "examples", "serve_topk.py")
     cmd = [sys.executable, script, "--arch", args.arch,
-           "--requests", str(args.requests), "--batch", str(args.batch)] + extra
+           "--requests", str(args.requests), "--batch", str(args.batch),
+           "--tenants", str(args.tenants)] + extra
     raise SystemExit(subprocess.call(cmd))
 
 

@@ -1,0 +1,9 @@
+# Multi-tenant top-K stream fleet: M concurrent streams, each with its own
+# K, window length and cost model, advanced inside one jitted step.
+#   engine   — batched ReservoirState (leading stream axis) + StreamEngine
+#   planner  — vectorized closed-form shp.plan_placement over the fleet
+#   router   — mixed-batch → per-K bucket scatter (pads/buckets by K)
+#   metering — per-stream ledgers reconciled against the analytic write law
+from . import engine, metering, planner, router  # noqa: F401
+from .engine import BatchedReservoirState, StreamEngine, StreamSpec  # noqa: F401
+from .planner import FleetPlan, plan_fleet  # noqa: F401

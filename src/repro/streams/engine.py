@@ -1,0 +1,290 @@
+"""Batched multi-tenant top-K stream engine.
+
+One ``jax.jit``-ed step advances M concurrent reservoirs at once: state
+carries a leading stream axis (``BatchedReservoirState``), the update is a
+vectorized sort-merge over all streams (``jax.vmap`` of ``core.topk``, so
+the per-stream semantics — deterministic tie-break, id dedupe, write mask —
+are bit-identical to M independent single-stream replays), and the
+accelerated path pre-filters candidates with the 2-D Pallas kernel
+``kernels.batched_topk`` before the exact merge.
+
+Heterogeneous fleets (per-stream K) are handled by bucketing streams by K
+(``streams.router``); ``StreamEngine`` runs every bucket inside one jitted
+multi-bucket step, plans placement proactively for the whole fleet
+(``streams.planner``) and meters every transaction per stream
+(``streams.metering``). Per-stream state is O(K), so the engine scales
+linearly in M.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import topk
+from repro.core.costs import TwoTierCostModel
+
+from . import metering, planner, router
+
+PAD_ID = router.PAD_ID
+
+
+class BatchedReservoirState(NamedTuple):
+    """M reservoirs stacked on a leading stream axis."""
+
+    scores: jax.Array  # (M, K) float32, each row sorted desc, -inf padded
+    ids: jax.Array  # (M, K) int32 per-stream local doc index, -1 padded
+    seen: jax.Array  # (M,) int32 — docs observed per stream (padding excluded)
+
+
+def init(m: int, k: int) -> BatchedReservoirState:
+    return BatchedReservoirState(
+        scores=jnp.full((m, k), -jnp.inf, dtype=jnp.float32),
+        ids=jnp.full((m, k), -1, dtype=jnp.int32),
+        seen=jnp.zeros((m,), dtype=jnp.int32),
+    )
+
+
+def _as_single(state: BatchedReservoirState) -> topk.ReservoirState:
+    return topk.ReservoirState(scores=state.scores, ids=state.ids,
+                               seen=state.seen)
+
+
+def update(state: BatchedReservoirState, batch_scores: jax.Array,
+           batch_ids: jax.Array) -> Tuple[BatchedReservoirState, jax.Array]:
+    """Fused update of all M streams: scores/ids (M, W), padding = (-inf, -1).
+
+    Returns (new_state, wrote (M, W) bool). Padding never writes and does
+    not advance ``seen``.
+    """
+    new, wrote = jax.vmap(topk.update)(_as_single(state), batch_scores,
+                                       batch_ids)
+    seen = state.seen + (batch_ids >= 0).sum(axis=1).astype(state.seen.dtype)
+    return BatchedReservoirState(new.scores, new.ids, seen), wrote
+
+
+def filtered_update(state: BatchedReservoirState, batch_scores: jax.Array,
+                    batch_ids: jax.Array, *, block_n: int = 512,
+                    use_pallas: bool = True
+                    ) -> Tuple[BatchedReservoirState, jax.Array]:
+    """Kernel-accelerated update for wide ingest batches: one 2-D Pallas
+    scan of all streams' candidates against their reservoir bars, then an
+    exact merge over at most K survivors per stream.
+
+    Equivalent to ``update`` when per-stream doc ids arrive in increasing
+    order (the stream case — ties then resolve identically); tests assert
+    the equality.
+    """
+    from repro.kernels.batched_topk import ops as btk_ops
+    k = state.scores.shape[1]
+    w = batch_scores.shape[1]
+    bar = state.scores[:, -1]
+    mask, _, _ = btk_ops.batched_topk_filter(batch_scores, bar,
+                                             block_n=block_n,
+                                             use_pallas=use_pallas)
+    # re-observed resident ids are dropped by topk.update anyway; mask them
+    # out *before* top_k so they cannot occupy a survivor slot that a fresh
+    # candidate (which plain ``update`` would admit) should get
+    batch_ids = batch_ids.astype(jnp.int32)
+    resident = jax.vmap(jnp.isin)(batch_ids, state.ids)
+    keep = (mask > 0) & ~resident
+    surv = jnp.where(keep, batch_scores.astype(jnp.float32), -jnp.inf)
+    top_scores, top_idx = jax.lax.top_k(surv, min(k, w))
+    top_ids = jnp.take_along_axis(batch_ids, top_idx, axis=1)
+    top_ids = jnp.where(jnp.isfinite(top_scores), top_ids, PAD_ID)
+    new, wrote_top = jax.vmap(topk.update)(_as_single(state), top_scores,
+                                           top_ids)
+    # scatter the survivors' write mask back to batch positions
+    wrote = jnp.zeros(batch_scores.shape, bool)
+    rows = jnp.arange(batch_scores.shape[0])[:, None]
+    wrote = wrote.at[rows, top_idx].set(wrote_top)
+    wrote = wrote & (batch_ids >= 0)
+    seen = state.seen + (batch_ids >= 0).sum(axis=1).astype(state.seen.dtype)
+    return BatchedReservoirState(new.scores, new.ids, seen), wrote
+
+
+def merge(a: BatchedReservoirState,
+          b: BatchedReservoirState) -> BatchedReservoirState:
+    """Row-wise cross-shard reduction (see ``topk.merge``)."""
+    new = jax.vmap(topk.merge)(_as_single(a), _as_single(b))
+    return BatchedReservoirState(new.scores, new.ids, a.seen + b.seen)
+
+
+def thresholds(state: BatchedReservoirState) -> jax.Array:
+    """(M,) current per-stream entry bars (-inf while unfull)."""
+    return state.scores[:, -1]
+
+
+def placements(state: BatchedReservoirState, r) -> jax.Array:
+    """Per-slot tier via ``topk.tier_of`` with per-stream r (M,):
+    0 = tier A, 1 = tier B, -1 = empty slot."""
+    r = jnp.asarray(r).reshape(-1, 1)
+    t = topk.tier_of(state.ids, r)
+    return jnp.where(state.ids >= 0, t, -1)
+
+
+def evicted_ids(old: BatchedReservoirState,
+                new: BatchedReservoirState) -> jax.Array:
+    """(M, K) local doc ids evicted by the step (-1 = none) — the storage
+    the fleet can free (paper §VI)."""
+    ev = jax.vmap(topk.evicted)(_as_single(old), _as_single(new))
+    return jnp.where(ev, old.ids, PAD_ID)
+
+
+def _make_step(use_kernel_filter: bool, block_n: int):
+    """One jitted step over ALL buckets: states/batches are same-length
+    tuples (the pytree structure is static, so the whole fleet advances in
+    a single XLA computation)."""
+
+    def step(states, batches):
+        new_states, wrotes, evs = [], [], []
+        for st, (s, i) in zip(states, batches):
+            if use_kernel_filter and s.shape[1] >= st.scores.shape[1]:
+                new, wrote = filtered_update(st, s, i, block_n=block_n)
+            else:
+                new, wrote = update(st, s, i)
+            new_states.append(new)
+            wrotes.append(wrote)
+            evs.append(evicted_ids(st, new))
+        return tuple(new_states), tuple(wrotes), tuple(evs)
+
+    return jax.jit(step)
+
+
+# ---------------------------------------------------------------------------
+# Fleet orchestration
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class StreamSpec:
+    """One tenant stream: its K, and either an explicit changeover index r
+    (with ``migrate`` choosing Algorithm C's bulk A→B migration at i = r)
+    or a cost model for the proactive planner to derive both."""
+
+    stream_id: int
+    k: int
+    cost_model: Optional[TwoTierCostModel] = None
+    r: Optional[float] = None
+    migrate: bool = False
+
+
+class StreamEngine:
+    """Host-side orchestrator: buckets streams by K, plans placement for
+    the whole fleet in one vectorized pass, routes mixed ingest batches,
+    advances every bucket inside one jitted step, and meters per-stream
+    ledgers against the analytic expectations.
+
+    Usage::
+
+        engine = StreamEngine(specs)
+        engine.ingest(stream_ids, scores, doc_ids)   # mixed batch, any order
+        survivors = engine.finalize()                # {stream_id: top-K ids}
+        engine.meter.reconcile(batch=W)              # vs analytic write law
+    """
+
+    def __init__(self, specs: Sequence[StreamSpec], *,
+                 use_kernel_filter: bool = False, block_n: int = 512):
+        if not specs:
+            raise ValueError("need at least one stream")
+        by_id = {s.stream_id: s for s in specs}
+        if len(by_id) != len(specs):
+            raise ValueError("duplicate stream ids")
+        self.buckets = router.bucket_streams(
+            {s.stream_id: s.k for s in specs})
+        self.router = router.StreamRouter(self.buckets)
+        # fleet plan for streams that carry a cost model
+        planned = [s for s in specs if s.r is None]
+        if planned:
+            if any(s.cost_model is None for s in planned):
+                raise ValueError("each stream needs either r or a cost_model")
+            plan = planner.plan_fleet([s.cost_model for s in planned])
+            r_of = {s.stream_id: float(plan.r[i])
+                    for i, s in enumerate(planned)}
+            mig_of = {s.stream_id: plan.migrate(i)
+                      for i, s in enumerate(planned)}
+            self.plan: Optional[planner.FleetPlan] = plan
+        else:
+            r_of, mig_of = {}, {}
+            self.plan = None
+        # global row order = bucket order × row order (the meter's layout)
+        self._global_rows: List[np.ndarray] = []
+        ks, rs, migs = [], [], []
+        offset = 0
+        self._row_of: Dict[int, int] = {}
+        for b in self.buckets:
+            rows = np.arange(offset, offset + b.m, dtype=np.int64)
+            self._global_rows.append(rows)
+            for j, sid in enumerate(b.stream_ids):
+                self._row_of[sid] = offset + j
+                spec = by_id[sid]
+                ks.append(spec.k)
+                if spec.r is not None:
+                    rs.append(spec.r)
+                    migs.append(spec.migrate)
+                else:
+                    rs.append(r_of[sid])
+                    migs.append(mig_of[sid])
+            offset += b.m
+        self.meter = metering.FleetMeter(ks, rs, migs)
+        self._states: List[BatchedReservoirState] = [
+            init(b.m, b.k) for b in self.buckets]
+        self._step = _make_step(use_kernel_filter, block_n)
+
+    @property
+    def m(self) -> int:
+        return sum(b.m for b in self.buckets)
+
+    def stream_row(self, stream_id: int) -> int:
+        """Global (meter) row of a stream."""
+        return self._row_of[stream_id]
+
+    def ingest(self, stream_ids, scores, doc_ids, *,
+               pad_to: Optional[int] = None) -> None:
+        """Feed a mixed batch of scored docs — (stream_id, score, local doc
+        index) triples in arbitrary order — through one jitted fleet step.
+
+        A doc id may appear at most once per stream per batch (they are
+        stream positions); the router rejects within-batch duplicates.
+        Re-observations across batches are deduped by the merge itself."""
+        routed = self.router.route(stream_ids, scores, doc_ids, pad_to=pad_to)
+        batches = tuple((jnp.asarray(s), jnp.asarray(i)) for s, i in routed)
+        new_states, wrotes, evs = self._step(tuple(self._states), batches)
+        self._states = list(new_states)
+        for bi in range(len(self.buckets)):
+            _, dense_ids = routed[bi]
+            self.meter.record_update(self._global_rows[bi], dense_ids,
+                                     np.asarray(wrotes[bi]),
+                                     np.asarray(evs[bi]),
+                                     np.asarray(new_states[bi].ids))
+
+    def states(self) -> List[BatchedReservoirState]:
+        return list(self._states)
+
+    def thresholds(self) -> Dict[int, float]:
+        out = {}
+        for bi, b in enumerate(self.buckets):
+            bars = np.asarray(thresholds(self._states[bi]))
+            out.update({sid: float(bars[j])
+                        for j, sid in enumerate(b.stream_ids)})
+        return out
+
+    def survivors(self) -> Dict[int, np.ndarray]:
+        """{stream_id: sorted local doc ids currently in the reservoir}."""
+        out = {}
+        for bi, b in enumerate(self.buckets):
+            ids = np.asarray(self._states[bi].ids)
+            for j, sid in enumerate(b.stream_ids):
+                v = ids[j]
+                out[sid] = np.sort(v[v >= 0]).astype(np.int64)
+        return out
+
+    def finalize(self) -> Dict[int, np.ndarray]:
+        """End-of-window: meter the final top-K read per stream (tiered by
+        each stream's r) and return the survivors."""
+        for bi in range(len(self.buckets)):
+            self.meter.record_reads(self._global_rows[bi],
+                                    np.asarray(self._states[bi].ids))
+        return self.survivors()

@@ -1,0 +1,153 @@
+"""Per-stream transaction metering for the fleet engine, reconciled
+against the analytic per-stream expectations.
+
+Array-of-ledgers layout: one row per stream, so recording a whole bucket's
+update is a handful of vectorized scatter-adds instead of M python ledger
+objects. ``ledger(i)`` materializes a classic ``tiers.Ledger`` view for one
+stream; ``reconcile`` compares actual write counts to the batched write law
+(``shp.expected_cum_writes_batched`` — eq. 11/12 when batch = 1).
+"""
+from __future__ import annotations
+
+from typing import Dict, Sequence
+
+import numpy as np
+
+from repro.core import shp
+from repro.core.tiers import Ledger
+
+TIER_A, TIER_B = 0, 1
+
+
+class FleetMeter:
+    """Vectorized per-stream ledgers for M streams.
+
+    ``rs[i]`` is stream i's changeover index: a written doc with local
+    stream index < r lands in tier A, else tier B (Algorithm C). Streams
+    flagged in ``migrate`` bulk-migrate A→B when the stream position
+    crosses r (Fig. 3): the meter counts the migrated docs (the
+    ``SimResult.migrated`` convention — migration is its own counter, not
+    extra reads/writes) and attributes every later delete and every final
+    read to tier B.
+    """
+
+    def __init__(self, ks: Sequence[int], rs: Sequence[float],
+                 migrate: Sequence[bool] | None = None):
+        m = len(ks)
+        self.ks = np.asarray(ks, np.int64)
+        self.rs = np.asarray(rs, np.float64)
+        assert self.rs.shape[0] == m
+        self.migrate = (np.zeros(m, bool) if migrate is None
+                        else np.asarray(migrate, bool))
+        self.migrated = np.zeros(m, bool)  # crossed r yet?
+        self.observed = np.zeros(m, np.int64)
+        self.writes = np.zeros((m, 2), np.int64)
+        self.reads = np.zeros((m, 2), np.int64)
+        self.deletes = np.zeros((m, 2), np.int64)
+        self.migrations = np.zeros(m, np.int64)
+
+    @property
+    def m(self) -> int:
+        return self.ks.shape[0]
+
+    # ---- recording ------------------------------------------------------
+
+    def record_update(self, stream_rows, doc_ids, wrote,
+                      evicted_ids=None, state_ids=None) -> None:
+        """Account one engine step for a bucket.
+
+        stream_rows (Mb,): global stream indices of the bucket's rows.
+        doc_ids (Mb, W) int: per-stream local doc indices, -1 = padding.
+        wrote (Mb, W) bool: reservoir-entry mask from the engine.
+        evicted_ids (Mb, K) int, optional: local doc indices evicted by this
+        step (-1 = none), for per-tier delete accounting.
+        state_ids (Mb, K) int, optional: post-step reservoir ids — needed to
+        count the docs that bulk-migrate when a migrating stream crosses r.
+        """
+        stream_rows = np.asarray(stream_rows, np.int64)
+        doc_ids = np.asarray(doc_ids)
+        wrote = np.asarray(wrote, bool)
+        r = self.rs[stream_rows][:, None]
+        in_a = doc_ids < r
+        np.add.at(self.observed, stream_rows, (doc_ids >= 0).sum(1))
+        # writes: doc index == arrival position, so index < r always means
+        # "written before the migration point" — valid with or without it
+        np.add.at(self.writes, (stream_rows, TIER_A), (wrote & in_a).sum(1))
+        np.add.at(self.writes, (stream_rows, TIER_B), (wrote & ~in_a).sum(1))
+        if evicted_ids is not None:
+            evicted_ids = np.asarray(evicted_ids)
+            ev = evicted_ids >= 0
+            # after the bulk migration nothing lives in A anymore
+            ev_a = ev & (evicted_ids < r) & ~self.migrated[stream_rows][:, None]
+            np.add.at(self.deletes, (stream_rows, TIER_A), ev_a.sum(1))
+            np.add.at(self.deletes, (stream_rows, TIER_B), (ev & ~ev_a).sum(1))
+        if state_ids is not None:
+            self._maybe_migrate(stream_rows, np.asarray(state_ids))
+
+    def _maybe_migrate(self, stream_rows, state_ids) -> None:
+        """Trigger the bulk A→B migration for streams whose position just
+        crossed r: every reservoir resident with index < r moves (batch
+        granularity — with W=1 this matches the simulator exactly)."""
+        crossing = (self.migrate[stream_rows] & ~self.migrated[stream_rows]
+                    & (self.observed[stream_rows]
+                       >= np.ceil(self.rs[stream_rows])))
+        if not np.any(crossing):
+            return
+        rows = stream_rows[crossing]
+        resident_a = ((state_ids[crossing] >= 0)
+                      & (state_ids[crossing] < self.rs[rows][:, None]))
+        np.add.at(self.migrations, rows, resident_a.sum(1))
+        self.migrated[rows] = True
+
+    def record_reads(self, stream_rows, doc_ids) -> None:
+        """Account the end-of-window top-K read (the consumer side)."""
+        stream_rows = np.asarray(stream_rows, np.int64)
+        doc_ids = np.asarray(doc_ids)
+        if doc_ids.ndim != 2:
+            doc_ids = doc_ids.reshape(-1, 1)
+        r = self.rs[stream_rows][:, None]
+        valid = doc_ids >= 0
+        # migrated streams serve the final read entirely from tier B
+        in_a = valid & (doc_ids < r) & ~self.migrated[stream_rows][:, None]
+        np.add.at(self.reads, (stream_rows, TIER_A), in_a.sum(1))
+        np.add.at(self.reads, (stream_rows, TIER_B), (valid & ~in_a).sum(1))
+
+    # ---- reconciliation -------------------------------------------------
+
+    def expected_writes(self, batch: int = 1) -> np.ndarray:
+        """(M,) analytic E[total reservoir writes] at each stream's current
+        observed length — the batched write law, eq. 11/12 when batch=1.
+        Streams that observed nothing expect nothing."""
+        out = np.zeros(self.m, np.float64)
+        seen = np.maximum(self.observed, 1)
+        for k in np.unique(self.ks):
+            sel = self.ks == k
+            out[sel] = shp.expected_cum_writes_batched(
+                seen[sel] - 1, int(k), int(batch))
+        return np.where(self.observed > 0, out, 0.0)
+
+    def reconcile(self, batch: int = 1) -> Dict[str, np.ndarray | float]:
+        """Actual vs analytic writes per stream. ``mean_rel_err`` is the
+        fleet-level sanity number: per-stream counts are single samples of
+        the expectation, but averaged over the fleet they concentrate."""
+        expected = self.expected_writes(batch=batch)
+        actual = self.writes.sum(1).astype(np.float64)
+        rel = (actual - expected) / np.maximum(expected, 1e-12)
+        return {
+            "actual": actual,
+            "expected": expected,
+            "rel_err": rel,
+            "mean_rel_err": float(np.mean(rel)),
+            "fleet_actual": float(actual.sum()),
+            "fleet_expected": float(expected.sum()),
+        }
+
+    # ---- classic per-stream view ---------------------------------------
+
+    def ledger(self, i: int) -> Ledger:
+        led = Ledger()
+        led.writes = self.writes[i].copy()
+        led.reads = self.reads[i].copy()
+        led.deletes = self.deletes[i].copy()
+        led.migrations = int(self.migrations[i])
+        return led

@@ -1,0 +1,154 @@
+"""Vectorized proactive fleet planner — ``core.shp.plan_placement`` over M
+heterogeneous cost models in one numpy pass.
+
+The paper's tractability claim is that r* is closed-form per stream
+(eq. 17/21 + the eq. 22 validity gate), so a fleet of thousands of tenant
+streams can be planned proactively before any document arrives — no
+per-stream optimization loop, just array arithmetic over the
+struct-of-arrays view of the cost models. ``plan_fleet`` must agree
+stream-for-stream with ``shp.plan_placement(cm)`` (tests assert this);
+it evaluates the same four candidate strategies in the same precedence
+order using the paper's logarithmic approximations.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.costs import TwoTierCostModel
+from repro.core.placement import Policy
+
+# Column order = candidate order in shp.plan_placement (ties resolve the
+# same way: first minimum wins).
+STRATEGIES = ("all_tier_a", "all_tier_b", "two_tier_no_migration",
+              "two_tier_migration")
+
+
+@dataclass(frozen=True)
+class FleetCosts:
+    """Struct-of-arrays view of M ``TwoTierCostModel``s (all (M,) float64,
+    except ``n``/``k`` which are the workload integers as float)."""
+
+    cw_a: np.ndarray
+    cw_b: np.ndarray
+    cr_a: np.ndarray
+    cr_b: np.ndarray
+    cs_a: np.ndarray
+    cs_b: np.ndarray
+    n: np.ndarray
+    k: np.ndarray
+    reads_per_window: np.ndarray
+
+    @classmethod
+    def from_models(cls, models: Sequence[TwoTierCostModel]) -> "FleetCosts":
+        f = lambda attr: np.array([getattr(m, attr) for m in models], np.float64)
+        return cls(
+            cw_a=f("cw_a"), cw_b=f("cw_b"), cr_a=f("cr_a"), cr_b=f("cr_b"),
+            cs_a=f("cs_a"), cs_b=f("cs_b"),
+            n=np.array([m.workload.n_docs for m in models], np.float64),
+            k=np.array([m.workload.k for m in models], np.float64),
+            reads_per_window=np.array(
+                [m.workload.reads_per_window for m in models], np.float64),
+        )
+
+    @property
+    def m(self) -> int:
+        return self.cw_a.shape[0]
+
+
+@dataclass(frozen=True)
+class FleetPlan:
+    """Per-stream outcome of the vectorized decision procedure."""
+
+    strategy_idx: np.ndarray  # (M,) int — index into STRATEGIES
+    r: np.ndarray  # (M,) absolute changeover index of the chosen strategy
+    totals: np.ndarray  # (M, 4) expected cost per candidate (+inf if gated)
+    r_no_migration: np.ndarray  # (M,) eq. 17 stationary point (may be inf/nan)
+    r_migration: np.ndarray  # (M,) eq. 21 stationary point
+    n_docs: np.ndarray  # (M,)
+
+    @property
+    def m(self) -> int:
+        return self.strategy_idx.shape[0]
+
+    def strategy(self, i: int) -> str:
+        return STRATEGIES[int(self.strategy_idx[i])]
+
+    def migrate(self, i: int) -> bool:
+        return self.strategy(i) == "two_tier_migration"
+
+    @property
+    def best_total(self) -> np.ndarray:
+        return self.totals[np.arange(self.m), self.strategy_idx]
+
+    def policy(self, i: int) -> Policy:
+        """The executable per-stream policy (same mapping as
+        ``placement.from_plan``)."""
+        s = self.strategy(i)
+        if s == "all_tier_a":
+            return Policy(r=float(self.n_docs[i]), name="all_a")
+        if s == "all_tier_b":
+            return Policy(r=0.0, name="all_b")
+        if s == "two_tier_no_migration":
+            return Policy(r=float(self.r_no_migration[i]), name="algoC_nomig")
+        return Policy(r=float(self.r_migration[i]), migrate_at_r=True,
+                      name="algoC_mig")
+
+    def strategy_histogram(self) -> dict:
+        return {s: int(np.sum(self.strategy_idx == i))
+                for i, s in enumerate(STRATEGIES)}
+
+
+def _safe_div(num: np.ndarray, den: np.ndarray) -> np.ndarray:
+    with np.errstate(divide="ignore", invalid="ignore"):
+        out = num / den
+    return np.where(den == 0.0, np.nan, out)
+
+
+def plan_fleet(models_or_costs) -> FleetPlan:
+    """Plan every stream in the fleet in one vectorized pass.
+
+    Accepts a sequence of ``TwoTierCostModel`` or a prebuilt ``FleetCosts``.
+    Uses the paper's approximate (logarithmic) forms, i.e. matches
+    ``shp.plan_placement(cm, exact=False)`` per stream.
+    """
+    fc = (models_or_costs if isinstance(models_or_costs, FleetCosts)
+          else FleetCosts.from_models(models_or_costs))
+    n, k, rpw = fc.n, fc.k, fc.reads_per_window
+    log_n_over_k = np.log(n / k)
+
+    # single-tier candidates (cost_single_tier, approx)
+    w_total = k * (1.0 + log_n_over_k)
+    tot_a = w_total * fc.cw_a + rpw * k * fc.cr_a + k * fc.cs_a
+    tot_b = w_total * fc.cw_b + rpw * k * fc.cr_b + k * fc.cs_b
+
+    # eq. 17 / eq. 21 stationary points + eq. 22 validity gate (incl. the
+    # second-order condition cw_A < cw_B — see shp.r_is_valid)
+    r_nm = _safe_div(fc.cw_a - fc.cw_b, (fc.cr_b - fc.cr_a) * rpw) * n
+    r_mg = _safe_div(fc.cw_a - fc.cw_b, fc.cs_b - fc.cs_a) * n
+    second_order = fc.cw_a < fc.cw_b
+
+    def _two_tier(r, migrate):
+        valid = (np.isfinite(r) & (k < r) & (r < n) & second_order)
+        rs = np.where(valid, r, k + 1.0)  # placeholder keeps logs finite
+        wa = k * (1.0 + np.log(rs / k))
+        wb = k * (np.log(n) - np.log(rs))
+        writes = wa * fc.cw_a + wb * fc.cw_b
+        rn = rs / n
+        if migrate:
+            storage = k * (rn * fc.cs_a + (1.0 - rn) * fc.cs_b)
+            total = writes + storage + k * (fc.cr_a + fc.cw_b)
+        else:
+            reads = rpw * k * (rn * fc.cr_a + (1.0 - rn) * fc.cr_b)
+            total = writes + reads + k * np.maximum(fc.cs_a, fc.cs_b)
+        return np.where(valid, total, np.inf)
+
+    totals = np.stack(
+        [tot_a, tot_b, _two_tier(r_nm, False), _two_tier(r_mg, True)], axis=1)
+    idx = np.argmin(totals, axis=1)
+    r_chosen = np.select(
+        [idx == 0, idx == 1, idx == 2], [n, np.zeros_like(n), r_nm], r_mg)
+    return FleetPlan(strategy_idx=idx, r=r_chosen, totals=totals,
+                     r_no_migration=r_nm, r_migration=r_mg, n_docs=n)

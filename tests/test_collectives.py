@@ -4,6 +4,11 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
+try:  # jax >= 0.5 exports it at top level
+    from jax import shard_map
+except (ImportError, AttributeError):
+    from jax.experimental.shard_map import shard_map
+
 from repro.parallel import collectives as coll
 
 
@@ -22,7 +27,7 @@ def test_error_feedback_is_unbiased_over_time():
     mesh = jax.make_mesh((1,), ("pod",))
     from jax.sharding import PartitionSpec as P
     # single device: psum is identity — isolates the EF algebra
-    f = jax.jit(jax.shard_map(
+    f = jax.jit(shard_map(
         lambda a, b: coll.compressed_psum(a, "pod", b), mesh=mesh,
         in_specs=(P(), P()), out_specs=(P(), P())))
 

@@ -1,12 +1,17 @@
 """Tables I & II — the paper's two cloud case studies, recomputed from the
-listed prices. Prints each strategy's expected cost next to the paper's
-printed value (two of which are not derivable from the listed prices; see
-DESIGN.md §9)."""
+listed prices — plus the 3-tier S3 Standard/IA/Glacier table the N-tier
+generalization adds. Prints each strategy's expected cost next to the
+paper's printed value (two of which are not derivable from the listed
+prices; see DESIGN.md §9). Also asserts the two-tier totals reproduce
+bit-identically (at printed precision) through the ``NTierCostModel``
+path, so the generalized stack can never drift from the paper."""
 from __future__ import annotations
 
 import time
 
-from repro.core import costs, shp
+import numpy as np
+
+from repro.core import costs, shp, topology
 
 
 def _strategies(cm):
@@ -61,6 +66,70 @@ def table2(emit):
     assert abs(shp.cost_with_migration(cm, r).total - 142.82) < 2.1
 
 
+def table_ntier_compat(emit):
+    """Both case studies through the N-tier path: same chosen strategy, and
+    every strategy total identical to the two-tier path at printed (cent)
+    precision."""
+    for i, cm in enumerate((costs.case_study_1(), costs.case_study_2()), 1):
+        t0 = time.perf_counter_ns()
+        nt = cm.as_ntier()
+        legacy = shp.plan_placement(cm)
+        npl = shp.plan_placement(nt)
+        assert npl.strategy == legacy.strategy, (npl.strategy, legacy.strategy)
+        assert f"{npl.total:.2f}" == f"{legacy.best.total:.2f}"
+        for r in (shp.r_optimal_no_migration(cm), shp.r_optimal_migration(cm)):
+            if shp.r_is_valid(cm, r):
+                two = shp.cost_no_migration(cm, r).total
+                n_ = shp.cost_ntier_no_migration(nt, (r,)).total
+                assert f"{two:.2f}" == f"{n_:.2f}", (two, n_)
+                two = shp.cost_with_migration(cm, r).total
+                n_ = shp.cost_ntier_migration(nt, (r,)).total
+                assert f"{two:.2f}" == f"{n_:.2f}", (two, n_)
+        us = (time.perf_counter_ns() - t0) / 1000.0
+        emit(f"ntier_compat.case_study_{i}", us,
+             f"{npl.strategy} ${npl.total:.2f} == two-tier path")
+
+
+def table_3tier(emit):
+    """The new table: case study 2 extended one tier down — EFS → S3
+    Standard → Glacier-IR under a 1MB / 3-month top-K window. A genuinely
+    3-boundary migration cascade, verified against brute-force grid search.
+    Also the Standard → Standard-IA → Glacier-IR lifecycle hierarchy, where
+    the N-tier validity gate *collapses* the IA tier: its per-request touch
+    cost always outweighs its rental advantage, so the optimal cascade
+    skips straight to Glacier."""
+    topo = topology.aws_efs_s3_glacier()
+    wl = costs.WorkloadSpec(n_docs=int(1e8), k=int(1e5), doc_gb=1e-3,
+                            window_months=3.0)
+    model = topo.cost_model(wl)
+    t0 = time.perf_counter_ns()
+    plan = shp.plan_placement_ntier(model)
+    us = (time.perf_counter_ns() - t0) / 1000.0
+    n = wl.n_docs
+    for t, name in enumerate(model.tier_names):
+        sc = shp.cost_ntier_no_migration(model, shp.single_tier_bounds(model, t))
+        emit(f"table3.all_{name}", us, f"${sc.total:.2f}")
+    bs = ",".join(f"{b / n:.4f}" for b in plan.boundaries)
+    emit("table3.chosen_strategy", us, f"{plan.strategy} @ [{bs}]")
+    emit("table3.chosen_total", us, f"${plan.total:.2f}")
+    bt, _, bm = shp.brute_force_plan_ntier(model, grid=48)
+    emit("table3.brute_force", us, f"${bt:.2f} migrate={bm}")
+    assert plan.strategy == "ntier_migration"
+    assert np.all(np.diff([0.0, *plan.boundaries, n]) > 0)  # 3 tiers used
+    assert plan.total <= bt * (1 + 1e-9)
+    assert abs(plan.total - bt) <= 0.02 * bt
+    # the lifecycle hierarchy: IA collapses (validity gate in action)
+    ia_model = topology.aws_s3_tiering().cost_model(wl)
+    ia_plan = shp.plan_placement_ntier(ia_model)
+    widths = np.diff([0.0, *ia_plan.boundaries, n])
+    emit("table3.std_ia_glacier", us,
+         f"{ia_plan.strategy} ${ia_plan.total:.2f} "
+         f"(IA width {widths[1] / n:.4f} — collapsed)")
+    assert widths[1] == 0.0
+
+
 def run(emit):
     table1(emit)
     table2(emit)
+    table_ntier_compat(emit)
+    table_3tier(emit)

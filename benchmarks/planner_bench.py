@@ -1,0 +1,84 @@
+"""Proactive-planner throughput: time the vectorized closed-form fleet
+planner at M in {1k, 16k, 64k} streams, two-tier (legacy ``plan_fleet``
+over a prebuilt ``FleetCosts``) and three-tier (the multi-threshold
+``shp.plan_ntier_arrays``). The paper's tractability claim is that the
+whole fleet plans in closed form before any document arrives — this bench
+tracks that planning stays off the ingest critical path as M grows.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import shp
+from repro.streams import planner
+
+SIZES = (1_000, 16_000, 64_000)
+
+
+def _rand(rng, m, lo=1e-8, hi=1e-3):
+    return 10.0 ** rng.uniform(np.log10(lo), np.log10(hi), m)
+
+
+def _two_tier_costs(rng, m) -> planner.FleetCosts:
+    n = rng.integers(10_000, 1_000_000, m).astype(np.float64)
+    k = np.maximum(1, (n * rng.uniform(0.001, 0.1, m))).astype(np.float64)
+    return planner.FleetCosts(
+        cw_a=_rand(rng, m), cw_b=_rand(rng, m), cr_a=_rand(rng, m),
+        cr_b=_rand(rng, m), cs_a=_rand(rng, m), cs_b=_rand(rng, m),
+        n=n, k=k, reads_per_window=np.ones(m))
+
+
+def _ntier_arrays(rng, m, t):
+    n = rng.integers(10_000, 1_000_000, m).astype(np.float64)
+    k = np.maximum(1, (n * rng.uniform(0.001, 0.1, m))).astype(np.float64)
+    return (_rand(rng, (m, t)), _rand(rng, (m, t)), _rand(rng, (m, t)),
+            n, k, np.ones(m))
+
+
+def _time(fn, repeats=3) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(emit):
+    rng = np.random.default_rng(0)
+    for m in SIZES:
+        fc = _two_tier_costs(rng, m)
+        sec = _time(lambda: planner.plan_fleet(fc))
+        emit(f"planner.two_tier.M{m}", sec * 1e6,
+             f"{m / sec:.0f} streams/s")
+        args = _ntier_arrays(rng, m, 3)
+        sec = _time(lambda: shp.plan_ntier_arrays(*args))
+        emit(f"planner.three_tier.M{m}", sec * 1e6,
+             f"{m / sec:.0f} streams/s")
+
+
+def main():
+    import argparse
+    try:
+        from benchmarks.run import write_trajectory
+    except ImportError:
+        from run import write_trajectory
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None,
+                    help="also write a BENCH_planner.json trajectory file")
+    args = ap.parse_args()
+    rows = []
+
+    def emit(name, us, derived=""):
+        print(f"{name},{us:.1f},{derived}")
+        rows.append({"name": name, "us_per_call": us, "derived": derived})
+
+    run(emit)
+    if args.json:
+        print(f"wrote {write_trajectory('planner', rows, args.json)}")
+
+
+if __name__ == "__main__":
+    main()

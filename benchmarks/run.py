@@ -1,18 +1,24 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
 # ``--json`` additionally writes one BENCH_<module>.json trajectory file per
-# module, so every bench run produces uniform machine-readable artifacts.
+# module (deterministic: sorted keys, rows in emission order) under
+# ``--out-dir`` so bench artifacts don't land in the repo root.
 import argparse
 import json
+import os
 import sys
 import traceback
 
 
-def write_trajectory(name: str, rows: list, path: str | None = None) -> str:
+def write_trajectory(name: str, rows: list, path: str | None = None,
+                     out_dir: str | None = None) -> str:
     """Write one BENCH_<name>.json trajectory file (the uniform format all
     bench entry points share)."""
-    path = path or f"BENCH_{name}.json"
+    if path is None:
+        d = out_dir or "."
+        os.makedirs(d, exist_ok=True)
+        path = os.path.join(d, f"BENCH_{name}.json")
     with open(path, "w") as f:
-        json.dump({"bench": name, "rows": rows}, f, indent=1)
+        json.dump({"bench": name, "rows": rows}, f, indent=1, sort_keys=True)
     return path
 
 
@@ -20,21 +26,25 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="run a single module (tables|curves|fig8|writes|"
-                         "kernels|roofline|streams)")
+                         "kernels|roofline|streams|planner)")
     ap.add_argument("--json", action="store_true",
                     help="also write BENCH_<module>.json per module")
+    ap.add_argument("--out-dir", default="bench_out",
+                    help="directory for BENCH_*.json artifacts "
+                         "(default: bench_out)")
     args = ap.parse_args()
     from benchmarks import (algo_writes, fig8_trace, fig_curves,
-                            kernels_bench, paper_tables, roofline,
-                            streams_bench)
+                            kernels_bench, paper_tables, planner_bench,
+                            roofline, streams_bench)
     modules = {
-        "tables": paper_tables,    # Tables I & II
+        "tables": paper_tables,    # Tables I & II + the 3-tier S3 table
         "curves": fig_curves,      # Figures 4 & 5
         "fig8": fig8_trace,        # Figure 8 trace validation
         "writes": algo_writes,     # eqs. 2-8
         "kernels": kernels_bench,  # Pallas-op microbench
         "roofline": roofline,      # dry-run roofline table
         "streams": streams_bench,  # multi-tenant fleet engine throughput
+        "planner": planner_bench,  # closed-form fleet planning throughput
     }
     failures = 0
     print("name,us_per_call,derived")
@@ -55,7 +65,7 @@ def main() -> None:
             emit(f"{name}.FAILED", 0.0, repr(e))
             traceback.print_exc(file=sys.stderr)
         if args.json:
-            write_trajectory(name, rows)
+            write_trajectory(name, rows, out_dir=args.out_dir)
     if failures:
         raise SystemExit(1)
 

@@ -7,10 +7,12 @@ the placement the SHP plan chose — exactly the paper's workflow with the
 serving fleet as the producer and offline analysis as the consumer.
 
 Multi-tenant mode (``--tenants M``): requests are interleaved across M
-tenant streams, each with its own K and cost model; retention then runs
-through the batched ``repro.streams`` engine — the fleet is planned in one
-vectorized pass and every scored batch advances all tenants inside one
-jitted step.
+tenant streams, each with its own K, cost model and tier topology (every
+third tenant places across a 3-tier HBM → DRAM → disk hierarchy, the rest
+across the 2-tier HBM → host preset); retention then runs through the
+batched ``repro.streams`` engine — the heterogeneous fleet is planned in a
+few vectorized passes and every scored batch advances all tenants inside
+one jitted step.
 
 Run: PYTHONPATH=src python examples/serve_topk.py [--requests 64]
 """
@@ -29,7 +31,9 @@ from repro.models import lm
 
 def make_tenant_engine(tenants: int, requests: int, topk: int, doc_gb: float):
     """Heterogeneous per-tenant retention: K alternates, cost models jitter
-    the HBM/host preset, the fleet planner picks each tenant's r*."""
+    the HBM presets, every third tenant gets a 3-tier HBM → DRAM → disk
+    topology, and the fleet planner picks each tenant's boundary vector."""
+    from repro.core import topology
     from repro.streams import StreamEngine, StreamSpec
     # ceil: when tenants doesn't divide requests, the first tenants get one
     # extra doc — the cost model must cover their longer stream
@@ -40,8 +44,13 @@ def make_tenant_engine(tenants: int, requests: int, topk: int, doc_gb: float):
     specs = []
     for t in range(tenants):
         k = max(1, min(topk if t % 2 == 0 else topk // 2, n_per - 1))
-        cm = costs.hbm_host_preset(n_docs=n_per, k=k, doc_gb=doc_gb,
-                                   window_seconds=30.0 * (1 + t % 4))
+        window = 30.0 * (1 + t % 4)
+        if t % 3 == 2:
+            cm = topology.hbm_dram_disk_preset(
+                n_docs=n_per, k=k, doc_gb=doc_gb, window_seconds=window)
+        else:
+            cm = costs.hbm_host_preset(n_docs=n_per, k=k, doc_gb=doc_gb,
+                                       window_seconds=window)
         specs.append(StreamSpec(stream_id=t, k=k, cost_model=cm))
     return StreamEngine(specs), specs
 
@@ -55,8 +64,12 @@ def main():
     ap.add_argument("--gen-len", type=int, default=12)
     ap.add_argument("--topk", type=int, default=8)
     ap.add_argument("--tenants", type=int, default=1,
-                    help=">1 routes retention through the multi-tenant "
-                         "repro.streams engine")
+                    help="number of tenant streams; with >1, retention is "
+                         "routed through the multi-tenant repro.streams "
+                         "engine (heterogeneous per-tenant K, cost model, "
+                         "and tier depth — every third tenant plans a "
+                         "3-tier HBM->DRAM->disk hierarchy); requires "
+                         "--requests >= 2*tenants")
     args = ap.parse_args()
 
     cfg = configs.get_config(args.arch, reduced=True)
@@ -123,6 +136,9 @@ def main():
         print(f"fleet ledger: writes actual={rec['fleet_actual']:.0f} "
               f"expected={rec['fleet_expected']:.1f} "
               f"mean rel err={rec['mean_rel_err']:+.2%}")
+        hist = engine.plan.strategy_histogram()
+        print("per-stream strategies: "
+              + ", ".join(f"{s}={c}" for s, c in sorted(hist.items())))
         for t in sorted(survivors)[:4]:
             reqs = (np.asarray(survivors[t]) * args.tenants + t).tolist()
             print(f"tenant {t}: top-{tenant_specs[t].k} retained requests "

@@ -15,6 +15,13 @@ from __future__ import annotations
 import dataclasses
 import math
 from dataclasses import dataclass
+from functools import cached_property
+from typing import TYPE_CHECKING
+
+import numpy as np
+
+if TYPE_CHECKING:
+    from .topology import TierTopology
 
 GB_PER_MB = 1.0 / 1000.0  # decimal GB, matching cloud billing
 DAYS_PER_MONTH = 30.0
@@ -104,6 +111,84 @@ class TwoTierCostModel:
         return self.cr_a + self.cw_b
 
     def replace(self, **kw) -> "TwoTierCostModel":
+        return dataclasses.replace(self, **kw)
+
+    def as_ntier(self) -> "NTierCostModel":
+        """The exact T=2 view of this model as an ``NTierCostModel``: the
+        derived cost vectors are computed with the same arithmetic, so the
+        case-study totals reproduce identically through the N-tier path."""
+        from .topology import TierSpec, TierTopology
+        topo = TierTopology(tiers=(
+            TierSpec(self.tier_a,
+                     xfer_in_per_gb=self.xfer_producer_to_a_per_gb,
+                     xfer_out_per_gb=self.xfer_a_to_consumer_per_gb),
+            TierSpec(self.tier_b,
+                     xfer_in_per_gb=self.xfer_producer_to_b_per_gb,
+                     xfer_out_per_gb=0.0),
+        ), name=f"{self.tier_a.name}->{self.tier_b.name}")
+        return NTierCostModel(topology=topo, workload=self.workload)
+
+
+@dataclass(frozen=True)
+class NTierCostModel:
+    """Derived per-document costs over an ordered ``TierTopology`` —
+    the N-tier generalization of ``TwoTierCostModel`` (which is the exact
+    T=2 case via :meth:`TwoTierCostModel.as_ntier`).
+
+    All vector properties are ``(T,)`` float64 arrays indexed by tier:
+    ``cw``/``cr`` bundle the inter-site transfer exactly like the two-tier
+    conventions, ``cs`` is the per-doc full-window rental, and
+    ``migration_per_boundary`` is eq. 19 applied per adjacent pair.
+    """
+
+    topology: "TierTopology"
+    workload: WorkloadSpec
+
+    @property
+    def t(self) -> int:
+        return self.topology.t
+
+    @property
+    def tier_names(self) -> tuple:
+        return self.topology.tier_names
+
+    @cached_property
+    def cw(self) -> np.ndarray:
+        g = self.workload.doc_gb
+        return np.array([ts.costs.put_per_doc + ts.xfer_in_per_gb * g
+                         for ts in self.topology.tiers], np.float64)
+
+    @cached_property
+    def cr(self) -> np.ndarray:
+        g = self.workload.doc_gb
+        return np.array([ts.costs.get_per_doc + ts.xfer_out_per_gb * g
+                         for ts in self.topology.tiers], np.float64)
+
+    @cached_property
+    def cs(self) -> np.ndarray:
+        """Per-doc rental per tier over the full window."""
+        wl = self.workload
+        return np.array([ts.costs.storage_per_gb_month * wl.doc_gb
+                         * wl.window_months for ts in self.topology.tiers],
+                        np.float64)
+
+    @cached_property
+    def storage_per_doc_month(self) -> np.ndarray:
+        """Per-doc-month rental rate per tier (for metered simulation)."""
+        return np.array([ts.costs.storage_per_gb_month * self.workload.doc_gb
+                         for ts in self.topology.tiers], np.float64)
+
+    @property
+    def cs_max(self) -> float:
+        """Most-expensive-tier rental — the no-migration upper bound."""
+        return float(np.max(self.cs))
+
+    @cached_property
+    def migration_per_boundary(self) -> np.ndarray:
+        """(T-1,) eq. 19 per boundary: read out of tier t, write into t+1."""
+        return self.cr[:-1] + self.cw[1:]
+
+    def replace(self, **kw) -> "NTierCostModel":
         return dataclasses.replace(self, **kw)
 
 

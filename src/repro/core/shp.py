@@ -14,13 +14,14 @@ arrays over M heterogeneous cost models).
 """
 from __future__ import annotations
 
+import itertools
 import math
 from dataclasses import dataclass
-from typing import Literal
+from typing import Literal, Sequence, Tuple
 
 import numpy as np
 
-from .costs import TwoTierCostModel
+from .costs import NTierCostModel, TwoTierCostModel
 
 EULER_GAMMA = 0.5772156649015329
 
@@ -256,9 +257,15 @@ class PlacementPlan:
         return self.best.strategy == "two_tier_migration"
 
 
-def plan_placement(cm: TwoTierCostModel, exact: bool = False) -> PlacementPlan:
+def plan_placement(cm, exact: bool = False):
     """Evaluate every strategy (respecting the eq. 22 validity gate) and pick
-    the cheapest — this is the proactive decision made before the stream."""
+    the cheapest — this is the proactive decision made before the stream.
+
+    Accepts a ``TwoTierCostModel`` (returns the paper's ``PlacementPlan``,
+    unchanged) or an ``NTierCostModel`` (returns ``NTierPlacementPlan`` via
+    the multi-threshold solver)."""
+    if isinstance(cm, NTierCostModel):
+        return plan_placement_ntier(cm)
     cands = [cost_single_tier(cm, "a", exact), cost_single_tier(cm, "b", exact)]
     r_nm = r_optimal_no_migration(cm)
     r_mg = r_optimal_migration(cm)
@@ -270,6 +277,400 @@ def plan_placement(cm: TwoTierCostModel, exact: bool = False) -> PlacementPlan:
     return PlacementPlan(best=best, candidates=tuple(cands),
                          r_no_migration=r_nm, r_migration=r_mg,
                          n_docs=cm.workload.n_docs)
+
+
+# ---------------------------------------------------------------------------
+# N-tier generalization (repro.core.topology): the multi-threshold plan
+# ---------------------------------------------------------------------------
+#
+# Doc i goes to tier t iff b_t <= i < b_{t+1} (b_0 = 0, b_T = N). Both
+# strategy families have *separable* expected cost in the boundary vector:
+#
+#   cost(b) = sum_j f_j(b_j) + const,   f_j(b) = (cw_{j-1} - cw_j)·W(b)
+#             + (lin_{j-1} - lin_j)·b [+ min(b, K)·(cr_{j-1} + cw_j)]
+#
+# where W(b) = E[writes among the first b docs] (eq. 12's approximation)
+# and lin_t is the per-index linear coefficient (reads_per_window·K/N·cr_t
+# for no-migration, K/N·cs_t for migration; the bracketed eq. 19 charge
+# only for the migration family). Each f_j is piecewise {linear below K,
+# a + c·ln b above K}, so on any interval its minimum sits at an endpoint,
+# at the kink b = K, or at the stationary point — which is exactly the
+# eq. 17/21 crossover between the two tiers the boundary separates. Under
+# the monotonicity constraint b_1 <= ... <= b_{T-1}, boundaries pool into
+# groups of equal value whose pooled coefficients telescope to the
+# crossover between the *outer* tier pair — i.e. collapsing the degenerate
+# tiers in between (the N-tier form of eq. 22's validity gate). Hence the
+# finite candidate set {0, K, N} ∪ {crossover(s, t) for all tier pairs}
+# contains an exact optimum, found by a tiny monotone DP per stream.
+# ``brute_force_plan_ntier`` verifies this against grid search.
+
+MAX_TIERS = 8  # 2^T candidate subsets — plenty for real hierarchies
+
+
+def _w_approx(b, k):
+    """Approximate cumulative write law (eq. 12 as printed): W(b) = b for
+    b <= K, else K(1 + ln(b/K)). Vectorized; W(0) = 0."""
+    b = np.asarray(b, np.float64)
+    k = np.asarray(k, np.float64)
+    safe = np.maximum(b, 1e-300)
+    return np.where(b <= k, b, k * (1.0 + np.log(safe / k)))
+
+
+def _cummin_with_arg(g: np.ndarray):
+    """Row-wise running minimum of ``g`` (M, C) and the column index where
+    each running minimum was first attained."""
+    m, c = g.shape
+    vals = np.empty_like(g)
+    args = np.empty((m, c), np.int64)
+    best = g[:, 0].copy()
+    barg = np.zeros(m, np.int64)
+    for j in range(c):
+        upd = g[:, j] < best
+        best = np.where(upd, g[:, j], best)
+        barg = np.where(upd, j, barg)
+        vals[:, j] = best
+        args[:, j] = barg
+    return vals, args
+
+
+def _solve_boundaries(cw_s, lin_s, n, k, interior=False):
+    """Minimize the separable boundary objective for one strategy family.
+
+    cw_s/lin_s: (M, Ts) per-tier coefficient columns of the (sub)topology;
+    n/k: (M,). With ``interior=True`` boundaries are restricted to [K, N)
+    — the N-tier form of eq. 22's gate for the migration family, so the
+    reservoir is full at every cascade and the last tier is always reached.
+
+    Returns (interior_val (M,), bounds (M, Ts-1)): the sum of the boundary
+    terms at the optimum and the optimal boundary vector. The caller adds
+    the boundary-independent terms W(N)·cw_last + N·lin_last [+ storage
+    bound / eq. 19 charges].
+    """
+    m, ts = cw_s.shape
+    if ts == 1:
+        return np.zeros(m), np.zeros((m, 0))
+    kf = np.asarray(k, np.float64)
+    lo = np.minimum(kf, n) if interior else np.zeros(m)
+    hi = np.nextafter(n, 0.0) if interior else np.asarray(n, np.float64)
+    cands = [lo, np.minimum(kf, n), hi]
+    for s, t in itertools.combinations(range(ts), 2):
+        with np.errstate(divide="ignore", invalid="ignore"):
+            b = kf * (cw_s[:, s] - cw_s[:, t]) / (lin_s[:, t] - lin_s[:, s])
+        b = np.where(np.isfinite(b), b, 0.0)
+        cands.append(np.clip(b, lo, hi))
+    c = np.sort(np.stack(cands, axis=1), axis=1)  # (M, C)
+    w = _w_approx(c, kf[:, None])
+    fs = []
+    for j in range(1, ts):
+        f = ((cw_s[:, j - 1] - cw_s[:, j])[:, None] * w
+             + (lin_s[:, j - 1] - lin_s[:, j])[:, None] * c)
+        fs.append(f)
+    g = fs[0]
+    args = []
+    for j in range(1, ts - 1):
+        vals, arg = _cummin_with_arg(g)
+        args.append(arg)
+        g = fs[j] + vals
+    rows = np.arange(m)
+    best_c = np.argmin(g, axis=1)
+    interior = g[rows, best_c]
+    idx = [best_c]
+    for arg in reversed(args):
+        best_c = arg[rows, best_c]
+        idx.append(best_c)
+    order = np.stack(list(reversed(idx)), axis=1)  # (M, Ts-1)
+    bounds = c[rows[:, None], order]
+    return interior, bounds
+
+
+def _tier_subsets(t: int):
+    """Non-empty ordered tier subsets, singletons first then ascending by
+    size — the first-minimum-wins precedence generalizing the candidate
+    order of ``plan_placement``."""
+    return [s for size in range(1, t + 1)
+            for s in itertools.combinations(range(t), size)]
+
+
+def _cascade_subsets(t: int):
+    """Tier subsets a migration cascade can traverse: at least two tiers,
+    always ending in the (consumer-local) last tier — skipped middle tiers
+    save their eq. 19 hop."""
+    return [s + (t - 1,) for size in range(1, t)
+            for s in itertools.combinations(range(t - 1), size)]
+
+
+def _cascade_fee(cr, cw, used_cols):
+    """Σ eq. 19 over consecutive used tiers: (M,) from (M, T) cost arrays
+    and the ordered used-tier index list."""
+    fee = np.zeros(cr.shape[0])
+    for u, v in zip(used_cols, used_cols[1:]):
+        fee = fee + cr[:, u] + cw[:, v]
+    return fee
+
+
+def plan_ntier_arrays(cw, cr, cs, n, k, rpw):
+    """Vectorized multi-threshold planner over M streams sharing one tier
+    count T. cw/cr/cs: (M, T); n/k/rpw: (M,). Returns a dict with
+    ``total`` (M,), ``bounds`` (M, T-1) full-topology boundary vectors,
+    and ``migrate`` (M,) bool.
+
+    No-migration family: solved per tier subset (degenerate tiers collapse
+    to zero width) with the most-expensive-*used*-tier rental bound.
+    Migration family: solved per cascade subset (ending at the last,
+    consumer-local tier; skipped tiers save their hop) with boundaries
+    gated to [K, N) (the eq. 22 gate), eq. 18-style time-split rental, and
+    the constant eq. 19 charge K·(cr_u + cw_v) per traversed tier pair;
+    the final read is excluded, generalizing eq. 20 — for T=2 this
+    objective is exactly the paper's ``cost_with_migration``.
+    """
+    cw = np.asarray(cw, np.float64)
+    cr = np.asarray(cr, np.float64)
+    cs = np.asarray(cs, np.float64)
+    n = np.asarray(n, np.float64)
+    k = np.asarray(k, np.float64)
+    rpw = np.asarray(rpw, np.float64)
+    m, t = cw.shape
+    if t > MAX_TIERS:
+        raise ValueError(f"topologies over {MAX_TIERS} tiers not supported")
+    w_n = _w_approx(n, k)
+    best_total = np.full(m, np.inf)
+    best_bounds = np.zeros((m, t - 1))
+    best_mig = np.zeros(m, bool)
+    for sub in _tier_subsets(t):
+        sa = np.asarray(sub)
+        lin = (rpw * k / n)[:, None] * cr[:, sa]
+        interior, sub_bounds = _solve_boundaries(cw[:, sa], lin, n, k)
+        total = (interior + w_n * cw[:, sa[-1]] + n * lin[:, -1]
+                 + k * np.max(cs[:, sa], axis=1))
+        edges = np.concatenate([np.zeros((m, 1)), sub_bounds, n[:, None]], 1)
+        widths = np.zeros((m, t))
+        widths[:, sa] = np.diff(edges, axis=1)
+        full = np.cumsum(widths, axis=1)[:, :-1]
+        upd = total < best_total
+        best_total = np.where(upd, total, best_total)
+        best_bounds = np.where(upd[:, None], full, best_bounds)
+    lin_mig = (k / n)[:, None] * cs
+    for sub in _cascade_subsets(t):
+        sa = np.asarray(sub)
+        interior, sub_bounds = _solve_boundaries(cw[:, sa], lin_mig[:, sa],
+                                                 n, k, interior=True)
+        total = (interior + w_n * cw[:, -1] + n * lin_mig[:, -1]
+                 + k * _cascade_fee(cr, cw, sub))
+        edges = np.concatenate([np.zeros((m, 1)), sub_bounds, n[:, None]], 1)
+        widths = np.zeros((m, t))
+        widths[:, sa] = np.diff(edges, axis=1)
+        full = np.cumsum(widths, axis=1)[:, :-1]
+        upd = total < best_total
+        best_total = np.where(upd, total, best_total)
+        best_bounds = np.where(upd[:, None], full, best_bounds)
+        best_mig = best_mig | upd
+    return {"total": best_total, "bounds": best_bounds, "migrate": best_mig}
+
+
+def ntier_strategy_name(bounds, n: float, t: int, migrate: bool) -> str:
+    """Histogram-friendly label: single-tier plans map onto the legacy
+    ``all_tier_<letter>`` names; multi-tier plans are
+    ``{two,n}_tier_{no_migration,migration}``."""
+    prefix = "two_tier" if t == 2 else "ntier"
+    if migrate:
+        return f"{prefix}_migration"
+    edges = np.concatenate([[0.0], np.asarray(bounds, np.float64), [n]])
+    used = np.flatnonzero(np.diff(edges) > 0)
+    if used.size == 1:
+        return f"all_tier_{chr(ord('a') + int(used[0]))}"
+    return f"{prefix}_no_migration"
+
+
+@dataclass(frozen=True)
+class NTierStrategyCost:
+    """Expected-cost breakdown of one N-tier strategy at given boundaries."""
+
+    strategy: str
+    bounds_over_n: tuple
+    total: float
+    writes_per_tier: tuple
+    reads: float
+    storage: float
+    migration: float
+
+    def breakdown(self) -> dict:
+        return {
+            "strategy": self.strategy, "bounds_over_n": self.bounds_over_n,
+            "total": self.total, "writes_per_tier": self.writes_per_tier,
+            "reads": self.reads, "storage": self.storage,
+            "migration": self.migration,
+        }
+
+
+def single_tier_bounds(cm: NTierCostModel, tier: int) -> tuple:
+    """Boundary vector placing every doc in ``tier``: boundaries at or
+    below it sit at 0, those above at N."""
+    n = float(cm.workload.n_docs)
+    return tuple(0.0 if j < tier else n for j in range(cm.t - 1))
+
+
+def _edges(cm: NTierCostModel, bounds) -> np.ndarray:
+    n = cm.workload.n_docs
+    b = np.clip(np.asarray(bounds, np.float64), 0.0, n)
+    if b.shape != (cm.t - 1,):
+        raise ValueError(f"need {cm.t - 1} boundaries for T={cm.t}, "
+                         f"got shape {b.shape}")
+    if np.any(np.diff(b) < 0):
+        raise ValueError("boundaries must be non-decreasing")
+    return np.concatenate([[0.0], b, [float(n)]])
+
+
+def _segment_writes(cm: NTierCostModel, edges, exact: bool) -> np.ndarray:
+    k = cm.workload.k
+    if exact:
+        w = np.where(edges > 0, expected_cum_writes(edges - 1.0, k), 0.0)
+    else:
+        w = _w_approx(edges, k)
+    return np.diff(w)
+
+
+def cost_ntier_no_migration(cm: NTierCostModel, bounds,
+                            exact: bool = False) -> NTierStrategyCost:
+    """Eqs. 13–16 generalized: per-segment writes, survivor reads i.u.d.
+    over the stream, most-expensive-used-tier rental bound."""
+    wl = cm.workload
+    edges = _edges(cm, bounds)
+    w_seg = _segment_writes(cm, edges, exact)
+    frac = np.diff(edges) / wl.n_docs
+    writes = w_seg * cm.cw
+    reads = wl.reads_per_window * wl.k * float(frac @ cm.cr)
+    storage = wl.k * float(np.max(np.where(frac > 0, cm.cs, -np.inf)))
+    total = float(writes.sum() + reads + storage)
+    return NTierStrategyCost(
+        ntier_strategy_name(edges[1:-1], wl.n_docs, cm.t, False),
+        tuple(edges[1:-1] / wl.n_docs), total, tuple(writes), reads,
+        storage, 0.0)
+
+
+def cost_ntier_migration(cm: NTierCostModel, bounds,
+                         exact: bool = False) -> NTierStrategyCost:
+    """Eqs. 18–20 generalized: residents cascade directly to the next
+    *used* tier when the stream crosses its boundary (zero-width tiers are
+    skipped, saving their hop; the constant eq. 19 charge K·(cr_u + cw_v)
+    applies per traversed pair — the planner gates boundaries to [K, N) so
+    the reservoir is full at every cascade), rental follows the write
+    pointer's tier time-split, and the final read — served entirely from
+    the last tier — is excluded. For T=2 this is exactly
+    ``cost_with_migration``."""
+    wl = cm.workload
+    edges = _edges(cm, bounds)
+    w_seg = _segment_writes(cm, edges, exact)
+    frac = np.diff(edges) / wl.n_docs
+    writes = w_seg * cm.cw
+    storage = wl.k * float(frac @ cm.cs)
+    used = [t for t in range(cm.t) if frac[t] > 0 or t == cm.t - 1]
+    migration = wl.k * float(_cascade_fee(cm.cr[None, :], cm.cw[None, :],
+                                          used)[0])
+    total = float(writes.sum() + storage + migration)
+    return NTierStrategyCost(
+        ntier_strategy_name(edges[1:-1], wl.n_docs, cm.t, True),
+        tuple(edges[1:-1] / wl.n_docs), total, tuple(writes), 0.0,
+        storage, migration)
+
+
+@dataclass(frozen=True)
+class NTierPlacementPlan:
+    """Outcome of the N-tier decision procedure: the cheapest of the
+    no-migration family (over all tier subsets) and the migration cascade."""
+
+    best: NTierStrategyCost
+    boundaries: Tuple[float, ...]
+    migrate: bool
+    n_docs: int
+    t: int
+
+    @property
+    def strategy(self) -> str:
+        return self.best.strategy
+
+    @property
+    def total(self) -> float:
+        return self.best.total
+
+    @property
+    def r(self) -> float:
+        """First changeover index (the T=2 shim)."""
+        return self.boundaries[0]
+
+
+def plan_placement_ntier(cm: NTierCostModel) -> NTierPlacementPlan:
+    """Single-stream N-tier plan (the M=1 view of ``plan_ntier_arrays``)."""
+    wl = cm.workload
+    out = plan_ntier_arrays(cm.cw[None, :], cm.cr[None, :], cm.cs[None, :],
+                            np.array([float(wl.n_docs)]),
+                            np.array([float(wl.k)]),
+                            np.array([wl.reads_per_window]))
+    bounds = tuple(float(b) for b in out["bounds"][0])
+    migrate = bool(out["migrate"][0])
+    fn = cost_ntier_migration if migrate else cost_ntier_no_migration
+    return NTierPlacementPlan(best=fn(cm, bounds), boundaries=bounds,
+                              migrate=migrate, n_docs=wl.n_docs, t=cm.t)
+
+
+def plan_ntier_batch(models: Sequence[NTierCostModel]):
+    """Vectorized plan for a batch of N-tier models sharing one T.
+    Returns (total (M,), bounds (M, T-1), migrate (M,), strategies list)."""
+    t = models[0].t
+    if any(m.t != t for m in models):
+        raise ValueError("plan_ntier_batch needs a uniform tier count")
+    cw = np.stack([m.cw for m in models])
+    cr = np.stack([m.cr for m in models])
+    cs = np.stack([m.cs for m in models])
+    n = np.array([float(m.workload.n_docs) for m in models])
+    k = np.array([float(m.workload.k) for m in models])
+    rpw = np.array([m.workload.reads_per_window for m in models])
+    out = plan_ntier_arrays(cw, cr, cs, n, k, rpw)
+    strategies = [ntier_strategy_name(out["bounds"][i], n[i], t,
+                                      bool(out["migrate"][i]))
+                  for i in range(len(models))]
+    return out["total"], out["bounds"], out["migrate"], strategies
+
+
+def brute_force_plan_ntier(cm: NTierCostModel, grid: int = 48):
+    """Ground-truth verifier: grid search over monotone boundary vectors
+    for both strategy families (same objectives as the closed form).
+    Returns (total, bounds tuple, migrate)."""
+    wl = cm.workload
+    n, k, t = float(wl.n_docs), float(wl.k), cm.t
+    vals = np.unique(np.concatenate([
+        [0.0, min(k, n), n], np.geomspace(1.0, n, grid)]))
+    combos = np.array(list(
+        itertools.combinations_with_replacement(vals, t - 1)))
+    edges = np.concatenate([np.zeros((combos.shape[0], 1)), combos,
+                            np.full((combos.shape[0], 1), n)], axis=1)
+    w_seg = np.diff(_w_approx(edges, k), axis=1)
+    frac = np.diff(edges, axis=1) / n
+    writes = w_seg @ cm.cw
+    # no-migration family
+    reads = wl.reads_per_window * k * (frac @ cm.cr)
+    cs_used = np.max(np.where(frac > 0, cm.cs[None, :], -np.inf), axis=1)
+    tot_nm = writes + reads + k * cs_used
+    # migration family: zero-width tiers are skipped (saving their eq. 19
+    # hop); every crossing between consecutive *used* tiers is gated to
+    # [K, N) (eq. 22), and at least one crossing must happen
+    g = combos.shape[0]
+    kmin = min(k, n)
+    used = np.concatenate([frac[:, :-1] > 0, np.ones((g, 1), bool)], axis=1)
+    seen_before = np.logical_or.accumulate(used, axis=1)[:, :-1]
+    crossing = used[:, 1:] & seen_before  # (G, T-1)
+    gated = (combos >= kmin) & (combos < n)
+    valid = np.all(~crossing | gated, axis=1) & crossing.any(axis=1)
+    fee = np.zeros(g)
+    prev = np.zeros(g, np.int64)
+    for t_i in range(1, t):
+        hop = crossing[:, t_i - 1]
+        fee = fee + np.where(hop, cm.cr[prev] + cm.cw[t_i], 0.0)
+        prev = np.where(used[:, t_i], t_i, prev)
+    tot_mg = np.where(valid, writes + k * (frac @ cm.cs) + k * fee, np.inf)
+    i_nm, i_mg = int(np.argmin(tot_nm)), int(np.argmin(tot_mg))
+    if tot_nm[i_nm] <= tot_mg[i_mg]:
+        return float(tot_nm[i_nm]), tuple(combos[i_nm]), False
+    return float(tot_mg[i_mg]), tuple(combos[i_mg]), True
 
 
 def cost_curve(cm: TwoTierCostModel, migrate: bool, num: int = 512) -> np.ndarray:

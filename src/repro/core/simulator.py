@@ -1,20 +1,20 @@
-"""Trace-driven simulator (paper §VIII, Fig. 8).
+"""Trace-driven simulator (paper §VIII, Fig. 8), generalized to N tiers.
 
 Replays an interestingness trace through the exact top-K reservoir and a
 placement policy, accounting every transaction, byte moved, and doc-month of
 rental. Used to validate the analytic model (tests assert the simulated cost
-matches `core.shp` expectations on randomly-ordered traces) and to reproduce
-Fig. 8's cumulative-writes comparison.
+matches `core.shp` expectations on randomly-ordered traces — per tier for
+N-tier topologies) and to reproduce Fig. 8's cumulative-writes comparison.
 """
 from __future__ import annotations
 
 import heapq
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import Optional, Union
 
 import numpy as np
 
-from .costs import TwoTierCostModel
+from .costs import NTierCostModel, TwoTierCostModel
 from .placement import Policy, TIER_A, TIER_B
 
 
@@ -22,13 +22,15 @@ from .placement import Policy, TIER_A, TIER_B
 class SimResult:
     n: int
     k: int
-    writes_per_tier: np.ndarray  # (2,)
-    reads_per_tier: np.ndarray  # (2,) final-read transactions
-    migrated: int
+    writes_per_tier: np.ndarray  # (T,)
+    reads_per_tier: np.ndarray  # (T,) final-read transactions
+    migrated: int  # total migration hops across all boundaries
     evictions: int
     cum_writes: np.ndarray  # (n,) cumulative reservoir writes after doc i
-    doc_months_per_tier: np.ndarray  # (2,) rental actually consumed
+    doc_months_per_tier: np.ndarray  # (T,) rental actually consumed
     survivor_ids: np.ndarray  # (k,) stream indices of final top-K
+    migrated_per_boundary: np.ndarray = field(
+        default_factory=lambda: np.zeros(1, np.int64))  # (T-1,) hops per boundary
     cost_writes: float = 0.0
     cost_reads: float = 0.0
     cost_storage: float = 0.0
@@ -39,34 +41,51 @@ class SimResult:
         return self.cost_writes + self.cost_reads + self.cost_storage + self.cost_migration
 
 
+CostModel = Union[TwoTierCostModel, NTierCostModel]
+
+
 def simulate(scores: np.ndarray, k: int, policy: Policy,
-             cost_model: Optional[TwoTierCostModel] = None,
+             cost_model: Optional[CostModel] = None,
              storage_bound: bool = False) -> SimResult:
     """Replay ``scores`` (interestingness trace, one doc per index).
 
     Exact reservoir semantics: doc i is written iff it ranks in the top-K of
     docs 0..i (ties: earlier doc wins). Eviction frees its rental. If
-    ``cost_model`` is given, costs follow its per-doc conventions; with
-    ``storage_bound`` the rental is charged as the paper's upper bound
-    (K docs · full window · max-rate) instead of metered doc-months.
+    ``cost_model`` is given (two-tier or N-tier), costs follow its per-doc
+    conventions; with ``storage_bound`` the rental is charged as the paper's
+    upper bound (K docs · full window · max-rate) instead of metered
+    doc-months. Migrating policies cascade the residents of tier t-1 into
+    tier t when the position crosses boundary t, each hop charged eq. 19.
     """
     scores = np.asarray(scores, dtype=np.float64)
     n = scores.shape[0]
     if not 0 < k < n:
         raise ValueError(f"require 0 < k < n, got k={k} n={n}")
 
+    nt = None
+    if cost_model is not None:
+        nt = (cost_model.as_ntier() if isinstance(cost_model, TwoTierCostModel)
+              else cost_model)
+    t_tiers = max(policy.n_tiers, nt.t if nt is not None else 2)
+    if nt is not None and nt.t < policy.n_tiers:
+        raise ValueError(f"policy places across {policy.n_tiers} tiers but "
+                         f"the cost model has {nt.t}")
+
     # min-heap of (score, -index): root = weakest member (ties: latest doc
     # is weakest, i.e. earlier doc wins, matching topk.update's lexsort).
     heap: list[tuple[float, int]] = []
     tier_of_doc: dict[int, int] = {}
     write_index: dict[int, int] = {}
-    writes = np.zeros(2, dtype=np.int64)
-    reads = np.zeros(2, dtype=np.int64)
-    doc_months = np.zeros(2, dtype=np.float64)
+    writes = np.zeros(t_tiers, dtype=np.int64)
+    reads = np.zeros(t_tiers, dtype=np.int64)
+    doc_months = np.zeros(t_tiers, dtype=np.float64)
     cum_writes = np.zeros(n, dtype=np.int64)
+    migrated_per_boundary = np.zeros(max(t_tiers - 1, 1), dtype=np.int64)
+    mig_reads = np.zeros(t_tiers, dtype=np.int64)  # cascade hops out of tier
+    mig_writes = np.zeros(t_tiers, dtype=np.int64)  # cascade hops into tier
     evictions = 0
-    migrated = 0
-    mig_at = policy.migration_index()
+    mig_ats = policy.migration_indices()  # one trigger per boundary, or ()
+    floor = 0  # highest fired boundary: writes/residents never go below it
     wrote_so_far = 0
 
     wl = cost_model.workload if cost_model is not None else None
@@ -78,14 +97,23 @@ def simulate(scores: np.ndarray, k: int, policy: Policy,
         doc_months[t] += (end_i - write_index[doc]) * month_per_doc_slot
 
     for i in range(n):
-        if mig_at is not None and i == mig_at:
-            # bulk migration A→B of everything currently resident in A
+        if floor < len(mig_ats) and i >= mig_ats[floor]:
+            # every boundary the position has crossed fires at once:
+            # residents hop *directly* to the highest crossed tier, so
+            # zero-width tiers (coincident triggers) are skipped
+            dst = floor
+            while dst < len(mig_ats) and i >= mig_ats[dst]:
+                dst += 1
             for doc in list(tier_of_doc):
-                if tier_of_doc[doc] == TIER_A:
+                src = tier_of_doc[doc]
+                if src < dst:
                     _charge_rental(doc, i)
-                    tier_of_doc[doc] = TIER_B
+                    tier_of_doc[doc] = dst
                     write_index[doc] = i
-                    migrated += 1
+                    migrated_per_boundary[dst - 1] += 1
+                    mig_reads[src] += 1
+                    mig_writes[dst] += 1
+            floor = dst
         entry = (scores[i], -i)
         if len(heap) < k:
             accepted = True
@@ -101,9 +129,7 @@ def simulate(scores: np.ndarray, k: int, policy: Policy,
             accepted = False
         if accepted:
             heapq.heappush(heap, entry)
-            t = policy.tier_of(i)
-            if mig_at is not None and i >= mig_at:
-                t = TIER_B
+            t = min(max(policy.tier_of(i), floor), t_tiers - 1)
             tier_of_doc[i] = t
             write_index[i] = i
             writes[t] += 1
@@ -117,22 +143,19 @@ def simulate(scores: np.ndarray, k: int, policy: Policy,
         reads[tier_of_doc[int(doc)]] += 1
 
     res = SimResult(n=n, k=k, writes_per_tier=writes, reads_per_tier=reads,
-                    migrated=migrated, evictions=evictions,
-                    cum_writes=cum_writes, doc_months_per_tier=doc_months,
-                    survivor_ids=survivors)
+                    migrated=int(migrated_per_boundary.sum()),
+                    evictions=evictions, cum_writes=cum_writes,
+                    doc_months_per_tier=doc_months, survivor_ids=survivors,
+                    migrated_per_boundary=migrated_per_boundary)
 
-    if cost_model is not None:
-        cm = cost_model
-        res.cost_writes = writes[TIER_A] * cm.cw_a + writes[TIER_B] * cm.cw_b
-        res.cost_reads = (reads[TIER_A] * cm.cr_a + reads[TIER_B] * cm.cr_b) \
-            * wl.reads_per_window
-        res.cost_migration = migrated * cm.migration_per_doc
+    if nt is not None:
+        res.cost_writes = float(writes @ nt.cw)
+        res.cost_reads = float(reads @ nt.cr) * wl.reads_per_window
+        res.cost_migration = float(mig_reads @ nt.cr + mig_writes @ nt.cw)
         if storage_bound:
-            res.cost_storage = k * cm.cs_max
+            res.cost_storage = k * nt.cs_max
         else:
-            rate_a = cm.tier_a.storage_per_gb_month * wl.doc_gb
-            rate_b = cm.tier_b.storage_per_gb_month * wl.doc_gb
-            res.cost_storage = doc_months[TIER_A] * rate_a + doc_months[TIER_B] * rate_b
+            res.cost_storage = float(doc_months @ nt.storage_per_doc_month)
     return res
 
 

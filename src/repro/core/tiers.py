@@ -1,6 +1,7 @@
-"""TieredStore — the runtime that actually holds top-K payloads across a
-hot (device HBM) / cold (host DRAM or disk) hierarchy, placing each write
-according to a `placement.Policy` (the paper's Fig. 3 loop, §VII).
+"""TieredStore — the runtime that actually holds top-K payloads across an
+ordered tier hierarchy (hot device HBM → host DRAM → disk/object store),
+placing each write according to a `placement.Policy` (the paper's Fig. 3
+loop, §VII, generalized to N tiers).
 
 The ledger records every transaction and byte so real runs can be reconciled
 against the analytic expectations (and against `core.simulator`). For a
@@ -24,12 +25,24 @@ from .placement import Policy, TIER_A, TIER_B
 
 @dataclass
 class Ledger:
+    """Per-tier transaction counters; index = tier (2 tiers by default)."""
+
     writes: np.ndarray = field(default_factory=lambda: np.zeros(2, np.int64))
     reads: np.ndarray = field(default_factory=lambda: np.zeros(2, np.int64))
     deletes: np.ndarray = field(default_factory=lambda: np.zeros(2, np.int64))
     migrations: int = 0
     bytes_written: np.ndarray = field(default_factory=lambda: np.zeros(2, np.int64))
     bytes_read: np.ndarray = field(default_factory=lambda: np.zeros(2, np.int64))
+
+    @classmethod
+    def sized(cls, n_tiers: int) -> "Ledger":
+        z = lambda: np.zeros(n_tiers, np.int64)
+        return cls(writes=z(), reads=z(), deletes=z(),
+                   bytes_written=z(), bytes_read=z())
+
+    @property
+    def n_tiers(self) -> int:
+        return self.writes.shape[0]
 
     def as_dict(self) -> dict:
         return {
@@ -125,20 +138,33 @@ def payload_nbytes(payload) -> int:
 
 
 class TieredStore:
-    """Two-tier payload store driven by an SHP placement policy.
+    """N-tier payload store driven by an SHP placement policy.
+
+    Constructed with one backing store per tier, ordered hot → cold
+    (``TieredStore(policy, hot, cold)`` is the classic two-tier form;
+    pass more stores for deeper hierarchies).
 
     Usage (inside the consumer-side of a train/serve loop):
         store.write(doc_id, payload)          # tier chosen by policy(doc_id)
         store.evict(doc_id)                   # reservoir overwrote the doc
-        store.maybe_migrate(stream_index)     # bulk A→B at i = r (Fig. 3)
+        store.maybe_migrate(stream_index)     # cascade at each boundary (Fig. 3)
         payloads = store.read_all(ids)        # the final top-K read
     """
 
-    def __init__(self, policy: Policy, hot: HotTier, cold: ColdTier):
+    def __init__(self, policy: Policy, *tier_stores):
+        if len(tier_stores) < 2:
+            raise ValueError("need at least two tier stores (hot, cold)")
+        if policy.n_tiers > len(tier_stores):
+            raise ValueError(f"policy places across {policy.n_tiers} tiers "
+                             f"but only {len(tier_stores)} stores given")
         self.policy = policy
-        self.tiers = {TIER_A: hot, TIER_B: cold}
-        self.ledger = Ledger()
-        self._migrated = False
+        self.tiers = dict(enumerate(tier_stores))
+        self.ledger = Ledger.sized(len(tier_stores))
+        self._floor = 0  # highest boundary whose cascade has fired
+
+    @property
+    def n_tiers(self) -> int:
+        return len(self.tiers)
 
     def tier_index_of(self, doc_id: int) -> Optional[int]:
         for t, tier in self.tiers.items():
@@ -147,9 +173,8 @@ class TieredStore:
         return None
 
     def write(self, doc_id: int, payload) -> int:
-        t = self.policy.tier_of(doc_id)
-        if self._migrated:
-            t = TIER_B
+        t = max(self.policy.tier_of(doc_id), self._floor)
+        t = min(t, self.n_tiers - 1)
         nbytes = self.tiers[t].put(doc_id, payload)
         self.ledger.writes[t] += 1
         self.ledger.bytes_written[t] += nbytes
@@ -162,23 +187,33 @@ class TieredStore:
         self.tiers[t].delete(doc_id)
         self.ledger.deletes[t] += 1
 
+    def _move(self, doc_id: int, src: int, dst: int) -> None:
+        payload = self.tiers[src].get(doc_id)
+        self.ledger.reads[src] += 1
+        self.ledger.bytes_read[src] += payload_nbytes(payload)
+        nbytes = self.tiers[dst].put(doc_id, payload)
+        self.ledger.writes[dst] += 1
+        self.ledger.bytes_written[dst] += nbytes
+        self.tiers[src].delete(doc_id)
+
     def maybe_migrate(self, stream_index: int) -> int:
-        mig_at = self.policy.migration_index()
-        if self._migrated or mig_at is None or stream_index < mig_at:
+        """Fire every boundary the stream position has crossed at once:
+        residents hop *directly* into the highest crossed tier, so
+        zero-width tiers (coincident boundaries) are skipped — matching the
+        planner's per-traversed-pair eq. 19 charge."""
+        dst = self._floor
+        for t, mig_at in enumerate(self.policy.migration_indices(), start=1):
+            if t > dst and stream_index >= mig_at:
+                dst = t
+        if dst == self._floor:
             return 0
         moved = 0
-        hot = self.tiers[TIER_A]
-        for doc_id in hot.doc_ids():
-            payload = hot.get(doc_id)
-            self.ledger.reads[TIER_A] += 1
-            self.ledger.bytes_read[TIER_A] += payload_nbytes(payload)
-            nbytes = self.tiers[TIER_B].put(doc_id, payload)
-            self.ledger.writes[TIER_B] += 1
-            self.ledger.bytes_written[TIER_B] += nbytes
-            hot.delete(doc_id)
-            moved += 1
+        for src in range(self._floor, dst):
+            for doc_id in self.tiers[src].doc_ids():
+                self._move(doc_id, src, dst)
+                moved += 1
+        self._floor = dst
         self.ledger.migrations += moved
-        self._migrated = True
         return moved
 
     def read(self, doc_id: int):

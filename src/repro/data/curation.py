@@ -16,7 +16,7 @@ from typing import Dict, Optional
 import numpy as np
 
 from repro.core import shp
-from repro.core.costs import TwoTierCostModel
+from repro.core.costs import NTierCostModel, TwoTierCostModel
 from repro.core.placement import Policy, optimal_policy
 from repro.core.tiers import TieredStore
 
@@ -34,7 +34,7 @@ class CurationStats:
 
 class TopKCurator:
     def __init__(self, k: int, store: TieredStore,
-                 cost_model: Optional[TwoTierCostModel] = None,
+                 cost_model: Optional[TwoTierCostModel | NTierCostModel] = None,
                  policy: Optional[Policy] = None):
         if policy is None:
             if cost_model is None:

@@ -1,9 +1,11 @@
 # Multi-tenant top-K stream fleet: M concurrent streams, each with its own
-# K, window length and cost model, advanced inside one jitted step.
+# K, window length, cost model and tier topology (2- and N-tier streams mix
+# freely), advanced inside one jitted step.
 #   engine   — batched ReservoirState (leading stream axis) + StreamEngine
 #   planner  — vectorized closed-form shp.plan_placement over the fleet
+#              (+ plan_fleet_mixed for heterogeneous tier depths)
 #   router   — mixed-batch → per-K bucket scatter (pads/buckets by K)
 #   metering — per-stream ledgers reconciled against the analytic write law
 from . import engine, metering, planner, router  # noqa: F401
 from .engine import BatchedReservoirState, StreamEngine, StreamSpec  # noqa: F401
-from .planner import FleetPlan, plan_fleet  # noqa: F401
+from .planner import FleetPlan, MixedFleetPlan, plan_fleet, plan_fleet_mixed  # noqa: F401

@@ -25,7 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import topk
-from repro.core.costs import TwoTierCostModel
+from repro.core.costs import NTierCostModel, TwoTierCostModel
 
 from . import metering, planner, router
 
@@ -119,10 +119,14 @@ def thresholds(state: BatchedReservoirState) -> jax.Array:
 
 
 def placements(state: BatchedReservoirState, r) -> jax.Array:
-    """Per-slot tier via ``topk.tier_of`` with per-stream r (M,):
-    0 = tier A, 1 = tier B, -1 = empty slot."""
-    r = jnp.asarray(r).reshape(-1, 1)
-    t = topk.tier_of(state.ids, r)
+    """Per-slot tier with per-stream changeovers: ``r`` is (M,) scalar
+    boundaries (the two-tier case, via ``topk.tier_of``) or (M, B)
+    boundary vectors (tier = number of boundaries <= id). -1 = empty."""
+    r = jnp.asarray(r)
+    if r.ndim <= 1:
+        t = topk.tier_of(state.ids, r.reshape(-1, 1))
+    else:
+        t = (state.ids[:, :, None] >= r[:, None, :]).sum(-1).astype(jnp.int32)
     return jnp.where(state.ids >= 0, t, -1)
 
 
@@ -160,15 +164,24 @@ def _make_step(use_kernel_filter: bool, block_n: int):
 
 @dataclass(frozen=True)
 class StreamSpec:
-    """One tenant stream: its K, and either an explicit changeover index r
-    (with ``migrate`` choosing Algorithm C's bulk A→B migration at i = r)
-    or a cost model for the proactive planner to derive both."""
+    """One tenant stream: its K, and either an explicit placement — a
+    changeover index ``r`` (two-tier) or a ``boundaries`` vector (N-tier),
+    with ``migrate`` choosing Algorithm C's cascade at the boundaries — or
+    a cost model (two-tier or N-tier topology) for the proactive planner
+    to derive both. Streams of different tier depths mix freely in one
+    fleet."""
 
     stream_id: int
     k: int
-    cost_model: Optional[TwoTierCostModel] = None
+    cost_model: Optional[TwoTierCostModel | NTierCostModel] = None
     r: Optional[float] = None
     migrate: bool = False
+    boundaries: Optional[Tuple[float, ...]] = None
+
+    def explicit_boundaries(self) -> Optional[Tuple[float, ...]]:
+        if self.boundaries is not None:
+            return tuple(float(b) for b in self.boundaries)
+        return (float(self.r),) if self.r is not None else None
 
 
 class StreamEngine:
@@ -195,23 +208,24 @@ class StreamEngine:
         self.buckets = router.bucket_streams(
             {s.stream_id: s.k for s in specs})
         self.router = router.StreamRouter(self.buckets)
-        # fleet plan for streams that carry a cost model
-        planned = [s for s in specs if s.r is None]
+        # fleet plan for streams that carry a cost model (2- and N-tier mix)
+        planned = [s for s in specs if s.explicit_boundaries() is None]
         if planned:
             if any(s.cost_model is None for s in planned):
-                raise ValueError("each stream needs either r or a cost_model")
-            plan = planner.plan_fleet([s.cost_model for s in planned])
-            r_of = {s.stream_id: float(plan.r[i])
+                raise ValueError(
+                    "each stream needs r, boundaries, or a cost_model")
+            plan = planner.plan_fleet_mixed([s.cost_model for s in planned])
+            b_of = {s.stream_id: plan.boundaries[i]
                     for i, s in enumerate(planned)}
             mig_of = {s.stream_id: plan.migrate(i)
                       for i, s in enumerate(planned)}
-            self.plan: Optional[planner.FleetPlan] = plan
+            self.plan: Optional[planner.MixedFleetPlan] = plan
         else:
-            r_of, mig_of = {}, {}
+            b_of, mig_of = {}, {}
             self.plan = None
         # global row order = bucket order × row order (the meter's layout)
         self._global_rows: List[np.ndarray] = []
-        ks, rs, migs = [], [], []
+        ks, bounds, migs = [], [], []
         offset = 0
         self._row_of: Dict[int, int] = {}
         for b in self.buckets:
@@ -221,14 +235,15 @@ class StreamEngine:
                 self._row_of[sid] = offset + j
                 spec = by_id[sid]
                 ks.append(spec.k)
-                if spec.r is not None:
-                    rs.append(spec.r)
+                explicit = spec.explicit_boundaries()
+                if explicit is not None:
+                    bounds.append(explicit)
                     migs.append(spec.migrate)
                 else:
-                    rs.append(r_of[sid])
+                    bounds.append(b_of[sid])
                     migs.append(mig_of[sid])
             offset += b.m
-        self.meter = metering.FleetMeter(ks, rs, migs)
+        self.meter = metering.FleetMeter(ks, migrate=migs, boundaries=bounds)
         self._states: List[BatchedReservoirState] = [
             init(b.m, b.k) for b in self.buckets]
         self._step = _make_step(use_kernel_filter, block_n)

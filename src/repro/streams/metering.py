@@ -3,8 +3,11 @@ against the analytic per-stream expectations.
 
 Array-of-ledgers layout: one row per stream, so recording a whole bucket's
 update is a handful of vectorized scatter-adds instead of M python ledger
-objects. ``ledger(i)`` materializes a classic ``tiers.Ledger`` view for one
-stream; ``reconcile`` compares actual write counts to the batched write law
+objects. Streams may place across heterogeneous tier depths: each stream
+carries a non-decreasing boundary vector (padded with +inf up to the
+fleet-wide maximum), and all per-tier arrays are (M, T_max). ``ledger(i)``
+materializes a classic ``tiers.Ledger`` view for one stream; ``reconcile``
+compares actual write counts to the batched write law
 (``shp.expected_cum_writes_batched`` — eq. 11/12 when batch = 1).
 """
 from __future__ import annotations
@@ -19,38 +22,84 @@ from repro.core.tiers import Ledger
 TIER_A, TIER_B = 0, 1
 
 
+def _pad_boundaries(boundaries: Sequence[Sequence[float]]) -> np.ndarray:
+    """(M, B_max) float64, each row non-decreasing, padded with +inf so
+    shallower streams simply never reach the deeper tiers."""
+    bmax = max(len(b) for b in boundaries)
+    out = np.full((len(boundaries), bmax), np.inf, np.float64)
+    for i, bs in enumerate(boundaries):
+        bs = tuple(float(b) for b in bs)
+        if any(b2 < b1 for b1, b2 in zip(bs, bs[1:])):
+            raise ValueError(f"stream {i}: boundaries must be non-decreasing")
+        out[i, : len(bs)] = bs
+    return out
+
+
 class FleetMeter:
     """Vectorized per-stream ledgers for M streams.
 
-    ``rs[i]`` is stream i's changeover index: a written doc with local
-    stream index < r lands in tier A, else tier B (Algorithm C). Streams
-    flagged in ``migrate`` bulk-migrate A→B when the stream position
-    crosses r (Fig. 3): the meter counts the migrated docs (the
+    ``boundaries[i]`` is stream i's changeover vector: a written doc with
+    local stream index in [b_t, b_{t+1}) lands in tier t (Algorithm C;
+    the classic two-tier case is a single boundary r). Streams flagged in
+    ``migrate`` cascade residents of tier t-1 into tier t when the stream
+    position crosses b_t (Fig. 3): the meter counts the migrated docs (the
     ``SimResult.migrated`` convention — migration is its own counter, not
     extra reads/writes) and attributes every later delete and every final
-    read to tier B.
+    read to the cascade floor.
     """
 
-    def __init__(self, ks: Sequence[int], rs: Sequence[float],
-                 migrate: Sequence[bool] | None = None):
+    def __init__(self, ks: Sequence[int], rs: Sequence[float] | None = None,
+                 migrate: Sequence[bool] | None = None, *,
+                 boundaries: Sequence[Sequence[float]] | None = None):
         m = len(ks)
         self.ks = np.asarray(ks, np.int64)
-        self.rs = np.asarray(rs, np.float64)
-        assert self.rs.shape[0] == m
+        if boundaries is None:
+            if rs is None:
+                raise ValueError("need rs or boundaries")
+            boundaries = [(float(r),) for r in rs]
+        self.boundaries = _pad_boundaries(boundaries)
+        assert self.boundaries.shape[0] == m
+        self.n_tiers = self.boundaries.shape[1] + 1
         self.migrate = (np.zeros(m, bool) if migrate is None
                         else np.asarray(migrate, bool))
-        self.migrated = np.zeros(m, bool)  # crossed r yet?
+        self.floor = np.zeros(m, np.int64)  # highest fired boundary per stream
         self.observed = np.zeros(m, np.int64)
-        self.writes = np.zeros((m, 2), np.int64)
-        self.reads = np.zeros((m, 2), np.int64)
-        self.deletes = np.zeros((m, 2), np.int64)
+        self.writes = np.zeros((m, self.n_tiers), np.int64)
+        self.reads = np.zeros((m, self.n_tiers), np.int64)
+        self.deletes = np.zeros((m, self.n_tiers), np.int64)
         self.migrations = np.zeros(m, np.int64)
 
     @property
     def m(self) -> int:
         return self.ks.shape[0]
 
+    @property
+    def rs(self) -> np.ndarray:
+        """(M,) first changeover index per stream (the two-tier view)."""
+        return self.boundaries[:, 0]
+
+    @property
+    def migrated(self) -> np.ndarray:
+        """(M,) whether the first cascade has fired."""
+        return self.floor > 0
+
     # ---- recording ------------------------------------------------------
+
+    def _static_tier(self, stream_rows, doc_ids) -> np.ndarray:
+        """Arrival-position tier (no cascade floor): # boundaries <= id."""
+        b = self.boundaries[stream_rows]  # (Mb, B)
+        return (doc_ids[:, :, None] >= b[:, None, :]).sum(axis=-1)
+
+    def _effective_tier(self, stream_rows, doc_ids) -> np.ndarray:
+        """Where the doc lives now: static tier, lifted to the cascade
+        floor for streams that migrated."""
+        return np.maximum(self._static_tier(stream_rows, doc_ids),
+                          self.floor[stream_rows][:, None])
+
+    @staticmethod
+    def _scatter(counter, stream_rows, tiers, mask) -> None:
+        rows2 = np.broadcast_to(stream_rows[:, None], tiers.shape)
+        np.add.at(counter, (rows2[mask], tiers[mask]), 1)
 
     def record_update(self, stream_rows, doc_ids, wrote,
                       evicted_ids=None, state_ids=None) -> None:
@@ -62,42 +111,48 @@ class FleetMeter:
         evicted_ids (Mb, K) int, optional: local doc indices evicted by this
         step (-1 = none), for per-tier delete accounting.
         state_ids (Mb, K) int, optional: post-step reservoir ids — needed to
-        count the docs that bulk-migrate when a migrating stream crosses r.
+        count the docs that cascade when a migrating stream crosses a
+        boundary.
         """
         stream_rows = np.asarray(stream_rows, np.int64)
         doc_ids = np.asarray(doc_ids)
         wrote = np.asarray(wrote, bool)
-        r = self.rs[stream_rows][:, None]
-        in_a = doc_ids < r
         np.add.at(self.observed, stream_rows, (doc_ids >= 0).sum(1))
-        # writes: doc index == arrival position, so index < r always means
-        # "written before the migration point" — valid with or without it
-        np.add.at(self.writes, (stream_rows, TIER_A), (wrote & in_a).sum(1))
-        np.add.at(self.writes, (stream_rows, TIER_B), (wrote & ~in_a).sum(1))
+        # writes: doc index == arrival position, so the static tier is the
+        # write destination with or without a later cascade
+        self._scatter(self.writes, stream_rows,
+                      self._static_tier(stream_rows, doc_ids),
+                      wrote & (doc_ids >= 0))
         if evicted_ids is not None:
             evicted_ids = np.asarray(evicted_ids)
-            ev = evicted_ids >= 0
-            # after the bulk migration nothing lives in A anymore
-            ev_a = ev & (evicted_ids < r) & ~self.migrated[stream_rows][:, None]
-            np.add.at(self.deletes, (stream_rows, TIER_A), ev_a.sum(1))
-            np.add.at(self.deletes, (stream_rows, TIER_B), (ev & ~ev_a).sum(1))
+            # after a cascade nothing lives below the floor anymore
+            self._scatter(self.deletes, stream_rows,
+                          self._effective_tier(stream_rows, evicted_ids),
+                          evicted_ids >= 0)
         if state_ids is not None:
             self._maybe_migrate(stream_rows, np.asarray(state_ids))
 
     def _maybe_migrate(self, stream_rows, state_ids) -> None:
-        """Trigger the bulk A→B migration for streams whose position just
-        crossed r: every reservoir resident with index < r moves (batch
-        granularity — with W=1 this matches the simulator exactly)."""
-        crossing = (self.migrate[stream_rows] & ~self.migrated[stream_rows]
-                    & (self.observed[stream_rows]
-                       >= np.ceil(self.rs[stream_rows])))
-        if not np.any(crossing):
+        """Fire every boundary whose position the stream just crossed at
+        once: residents hop directly to the highest crossed tier (skipping
+        zero-width tiers, like the simulator and ``TieredStore`` — with
+        W=1 the counts match the simulator exactly)."""
+        b = self.boundaries[stream_rows]  # (Mb, B)
+        crossed = np.where(np.isfinite(b),
+                           self.observed[stream_rows][:, None] >= np.ceil(b),
+                           False)
+        target = crossed.sum(axis=1)  # highest crossed boundary per stream
+        firing = self.migrate[stream_rows] & (target > self.floor[stream_rows])
+        if not np.any(firing):
             return
-        rows = stream_rows[crossing]
-        resident_a = ((state_ids[crossing] >= 0)
-                      & (state_ids[crossing] < self.rs[rows][:, None]))
-        np.add.at(self.migrations, rows, resident_a.sum(1))
-        self.migrated[rows] = True
+        rows = stream_rows[firing]
+        ids = state_ids[firing]
+        tiers = np.maximum(
+            (ids[:, :, None] >= self.boundaries[rows][:, None, :]).sum(-1),
+            self.floor[rows][:, None])
+        resident = (ids >= 0) & (tiers < target[firing][:, None])
+        np.add.at(self.migrations, rows, resident.sum(1))
+        self.floor[rows] = target[firing]
 
     def record_reads(self, stream_rows, doc_ids) -> None:
         """Account the end-of-window top-K read (the consumer side)."""
@@ -105,12 +160,10 @@ class FleetMeter:
         doc_ids = np.asarray(doc_ids)
         if doc_ids.ndim != 2:
             doc_ids = doc_ids.reshape(-1, 1)
-        r = self.rs[stream_rows][:, None]
-        valid = doc_ids >= 0
-        # migrated streams serve the final read entirely from tier B
-        in_a = valid & (doc_ids < r) & ~self.migrated[stream_rows][:, None]
-        np.add.at(self.reads, (stream_rows, TIER_A), in_a.sum(1))
-        np.add.at(self.reads, (stream_rows, TIER_B), (valid & ~in_a).sum(1))
+        # migrated streams serve the final read from the cascade floor up
+        self._scatter(self.reads, stream_rows,
+                      self._effective_tier(stream_rows, doc_ids),
+                      doc_ids >= 0)
 
     # ---- reconciliation -------------------------------------------------
 
@@ -145,7 +198,7 @@ class FleetMeter:
     # ---- classic per-stream view ---------------------------------------
 
     def ledger(self, i: int) -> Ledger:
-        led = Ledger()
+        led = Ledger.sized(self.n_tiers)
         led.writes = self.writes[i].copy()
         led.reads = self.reads[i].copy()
         led.deletes = self.deletes[i].copy()

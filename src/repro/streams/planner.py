@@ -9,15 +9,21 @@ struct-of-arrays view of the cost models. ``plan_fleet`` must agree
 stream-for-stream with ``shp.plan_placement(cm)`` (tests assert this);
 it evaluates the same four candidate strategies in the same precedence
 order using the paper's logarithmic approximations.
+
+Fleets may mix tier depths: ``plan_fleet_mixed`` routes each stream's cost
+model to the matching vectorized solver (this legacy two-tier pass, or the
+multi-threshold ``shp.plan_ntier_arrays`` grouped by tier count) and
+returns one uniform per-stream boundary-vector plan.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Sequence
+from typing import List, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.costs import TwoTierCostModel
+from repro.core import shp
+from repro.core.costs import NTierCostModel, TwoTierCostModel
 from repro.core.placement import Policy
 
 # Column order = candidate order in shp.plan_placement (ties resolve the
@@ -152,3 +158,79 @@ def plan_fleet(models_or_costs) -> FleetPlan:
         [idx == 0, idx == 1, idx == 2], [n, np.zeros_like(n), r_nm], r_mg)
     return FleetPlan(strategy_idx=idx, r=r_chosen, totals=totals,
                      r_no_migration=r_nm, r_migration=r_mg, n_docs=n)
+
+
+# ---------------------------------------------------------------------------
+# Mixed-depth fleets: two-tier and N-tier cost models side by side
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MixedFleetPlan:
+    """Per-stream boundary-vector plans for a fleet mixing tier depths.
+
+    Two-tier streams are planned by the legacy ``plan_fleet`` pass (their
+    single boundary is the chosen r); N-tier streams by the vectorized
+    multi-threshold solver, grouped by tier count.
+    """
+
+    boundaries: Tuple[Tuple[float, ...], ...]
+    migrate_flags: np.ndarray  # (M,) bool
+    strategies: Tuple[str, ...]
+    totals: np.ndarray  # (M,) expected cost of the chosen strategy
+
+    @property
+    def m(self) -> int:
+        return len(self.boundaries)
+
+    def strategy(self, i: int) -> str:
+        return self.strategies[i]
+
+    def migrate(self, i: int) -> bool:
+        return bool(self.migrate_flags[i])
+
+    def policy(self, i: int) -> Policy:
+        return Policy(boundaries=self.boundaries[i],
+                      migrate_at_r=self.migrate(i), name=self.strategies[i])
+
+    def strategy_histogram(self) -> dict:
+        out: dict = {}
+        for s in self.strategies:
+            out[s] = out.get(s, 0) + 1
+        return out
+
+
+def plan_fleet_mixed(models: Sequence[TwoTierCostModel | NTierCostModel]
+                     ) -> MixedFleetPlan:
+    """Plan a heterogeneous fleet in a handful of vectorized passes: one
+    legacy two-tier pass plus one N-tier pass per distinct tier count."""
+    m = len(models)
+    boundaries: List[Tuple[float, ...]] = [()] * m
+    migrate = np.zeros(m, bool)
+    strategies: List[str] = [""] * m
+    totals = np.zeros(m, np.float64)
+    two_idx = [i for i, cm in enumerate(models)
+               if isinstance(cm, TwoTierCostModel)]
+    if two_idx:
+        plan = plan_fleet([models[i] for i in two_idx])
+        for j, i in enumerate(two_idx):
+            boundaries[i] = (float(plan.r[j]),)
+            migrate[i] = plan.migrate(j)
+            strategies[i] = plan.strategy(j)
+            totals[i] = plan.best_total[j]
+    by_t: dict = {}
+    for i, cm in enumerate(models):
+        if isinstance(cm, NTierCostModel):
+            by_t.setdefault(cm.t, []).append(i)
+        elif not isinstance(cm, TwoTierCostModel):
+            raise TypeError(f"stream {i}: unsupported cost model {type(cm)}")
+    for t, idxs in sorted(by_t.items()):
+        tot, bounds, mig, strats = shp.plan_ntier_batch(
+            [models[i] for i in idxs])
+        for j, i in enumerate(idxs):
+            boundaries[i] = tuple(float(b) for b in bounds[j])
+            migrate[i] = bool(mig[j])
+            strategies[i] = strats[j]
+            totals[i] = tot[j]
+    return MixedFleetPlan(boundaries=tuple(boundaries),
+                          migrate_flags=migrate,
+                          strategies=tuple(strategies), totals=totals)

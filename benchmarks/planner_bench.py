@@ -1,9 +1,12 @@
 """Proactive-planner throughput: time the vectorized closed-form fleet
 planner at M in {1k, 16k, 64k} streams, two-tier (legacy ``plan_fleet``
-over a prebuilt ``FleetCosts``) and three-tier (the multi-threshold
-``shp.plan_ntier_arrays``). The paper's tractability claim is that the
-whole fleet plans in closed form before any document arrives — this bench
-tracks that planning stays off the ingest critical path as M grows.
+over a prebuilt ``FleetCosts``), three-tier (the multi-threshold
+``shp.plan_ntier_arrays``), and the constrained variants (per-tier
+capacity masks; capacity + read-path SLO through the exact joint solve).
+The paper's tractability claim is that the whole fleet plans in closed
+form before any document arrives — this bench tracks that planning stays
+off the ingest critical path as M grows, and what the constraint
+machinery costs on top.
 """
 from __future__ import annotations
 
@@ -37,6 +40,22 @@ def _ntier_arrays(rng, m, t):
             n, k, np.ones(m))
 
 
+def _constraint_arrays(rng, m, t, k, with_slo):
+    """Per-tier capacities (hot tier capped at a fraction of K) and, when
+    ``with_slo``, per-tier latencies rising with depth plus a binding
+    per-stream SLO."""
+    cap = np.full((m, t), np.inf)
+    cap[:, 0] = k * rng.uniform(0.1, 2.0, m)
+    lat = np.zeros((m, t))
+    slo = np.full(m, np.inf)
+    if with_slo:
+        lat = 10.0 ** rng.uniform(-3, 2, (m, t))
+        lat.sort(axis=1)
+        slo = 10.0 ** rng.uniform(np.log10(np.maximum(lat[:, 0], 1e-6)),
+                                  np.log10(lat[:, -1] + 1e-6))
+    return cap, lat, slo
+
+
 def _time(fn, repeats=3) -> float:
     best = float("inf")
     for _ in range(repeats):
@@ -56,6 +75,16 @@ def run(emit):
         args = _ntier_arrays(rng, m, 3)
         sec = _time(lambda: shp.plan_ntier_arrays(*args))
         emit(f"planner.three_tier.M{m}", sec * 1e6,
+             f"{m / sec:.0f} streams/s")
+        cap, lat, slo = _constraint_arrays(rng, m, 3, args[4], False)
+        sec = _time(lambda: shp.plan_ntier_arrays(*args, cap=cap, lat=lat,
+                                                  slo=slo), repeats=2)
+        emit(f"planner.three_tier_capacity.M{m}", sec * 1e6,
+             f"{m / sec:.0f} streams/s")
+        cap, lat, slo = _constraint_arrays(rng, m, 3, args[4], True)
+        sec = _time(lambda: shp.plan_ntier_arrays(*args, cap=cap, lat=lat,
+                                                  slo=slo), repeats=2)
+        emit(f"planner.three_tier_cap_slo.M{m}", sec * 1e6,
              f"{m / sec:.0f} streams/s")
 
 

@@ -1,9 +1,12 @@
 # The paper's primary contribution — proactive SHP-based hot/cold tier
 # placement for top-K stream workloads — plus the runtime that executes it,
-# generalized to ordered N-tier topologies (repro.core.topology).
-from . import costs, interestingness, placement, shp, simulator, tiers, topk, topology  # noqa: F401
+# generalized to ordered N-tier topologies (repro.core.topology) and to
+# constrained planning under per-tier capacities and read-path SLOs
+# (repro.core.constraints).
+from . import compat, constraints, costs, interestingness, placement, shp, simulator, tiers, topk, topology  # noqa: F401
+from .constraints import Constraint, ConstraintSet, ReadLatencySLO, TierCapacity  # noqa: F401
 from .costs import NTierCostModel, TierCosts, TwoTierCostModel, WorkloadSpec, case_study_1, case_study_2, hbm_host_preset  # noqa: F401
 from .placement import Policy, optimal_policy  # noqa: F401
 from .shp import NTierPlacementPlan, PlacementPlan, plan_placement, plan_placement_ntier  # noqa: F401
 from .tiers import ColdTier, HotTier, TieredStore  # noqa: F401
-from .topology import TierSpec, TierTopology, aws_efs_s3_glacier, aws_s3_tiering, hbm_dram_disk_preset  # noqa: F401
+from .topology import TierSpec, TierTopology, aws_archive_tiering, aws_efs_s3_glacier, aws_s3_tiering, hbm_dram_disk_preset  # noqa: F401

@@ -29,12 +29,21 @@ DAYS_PER_MONTH = 30.0
 
 @dataclass(frozen=True)
 class TierCosts:
-    """Raw billing structure of one storage tier."""
+    """Raw billing structure of one storage tier.
+
+    ``min_storage_days`` models lifetime-aware minimum-storage-duration
+    charges (S3-IA bills 30 days, Glacier 90): every object written to the
+    tier is billed at least that much rental even if deleted or
+    transitioned out earlier. ``core.simulator`` tops up each stay to the
+    minimum, and ``NTierCostModel.cs`` floors the full-window per-doc
+    rental at ``min_storage_days`` for short windows.
+    """
 
     name: str
     put_per_doc: float
     get_per_doc: float
     storage_per_gb_month: float
+    min_storage_days: float = 0.0
 
 
 @dataclass(frozen=True)
@@ -166,17 +175,41 @@ class NTierCostModel:
 
     @cached_property
     def cs(self) -> np.ndarray:
-        """Per-doc rental per tier over the full window."""
+        """Per-doc rental per tier over the full window, floored at each
+        tier's minimum storage duration (a doc resident the whole window
+        is still billed at least ``min_storage_days``)."""
         wl = self.workload
         return np.array([ts.costs.storage_per_gb_month * wl.doc_gb
-                         * wl.window_months for ts in self.topology.tiers],
-                        np.float64)
+                         * max(wl.window_months,
+                               ts.costs.min_storage_days / DAYS_PER_MONTH)
+                         for ts in self.topology.tiers], np.float64)
 
     @cached_property
     def storage_per_doc_month(self) -> np.ndarray:
         """Per-doc-month rental rate per tier (for metered simulation)."""
         return np.array([ts.costs.storage_per_gb_month * self.workload.doc_gb
                          for ts in self.topology.tiers], np.float64)
+
+    @cached_property
+    def min_storage_months(self) -> np.ndarray:
+        """(T,) minimum billed residency per stay (months); the metered
+        simulator tops every stay up to this."""
+        return np.array([ts.costs.min_storage_days / DAYS_PER_MONTH
+                         for ts in self.topology.tiers], np.float64)
+
+    @cached_property
+    def capacity_docs(self) -> np.ndarray:
+        """(T,) topology-declared per-tier occupancy bounds (inf where
+        undeclared) — picked up by the constrained planner by default."""
+        return np.array([np.inf if ts.capacity_docs is None
+                         else float(ts.capacity_docs)
+                         for ts in self.topology.tiers], np.float64)
+
+    @cached_property
+    def read_latency(self) -> np.ndarray:
+        """(T,) expected per-object retrieval latency (seconds)."""
+        return np.array([ts.read_latency_s for ts in self.topology.tiers],
+                        np.float64)
 
     @property
     def cs_max(self) -> float:

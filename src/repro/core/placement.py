@@ -18,9 +18,8 @@ from dataclasses import dataclass
 from typing import Optional, Tuple
 
 from .costs import NTierCostModel, TwoTierCostModel
-from . import shp
-
-TIER_A, TIER_B = 0, 1
+from . import compat, shp
+from .compat import TIER_A, TIER_B  # noqa: F401  (canonical home: compat)
 
 
 @dataclass(frozen=True)
@@ -41,16 +40,13 @@ class Policy:
         if self.boundaries is None:
             if self.r is None:
                 raise ValueError("need r or boundaries")
-            object.__setattr__(self, "boundaries", (float(self.r),))
+            object.__setattr__(self, "boundaries",
+                               compat.boundaries_from_r(self.r))
         else:
-            bs = tuple(float(b) for b in self.boundaries)
-            if not bs:
-                raise ValueError("boundaries must be non-empty")
-            if any(b2 < b1 for b1, b2 in zip(bs, bs[1:])):
-                raise ValueError(f"boundaries must be non-decreasing: {bs}")
+            bs = compat.validate_boundaries(self.boundaries)
             object.__setattr__(self, "boundaries", bs)
             if self.r is None:
-                object.__setattr__(self, "r", bs[0])
+                object.__setattr__(self, "r", compat.r_from_boundaries(bs))
 
     @property
     def n_tiers(self) -> int:
@@ -63,6 +59,8 @@ class Policy:
 
     def migration_index(self) -> Optional[int]:
         """First migration trigger (the T=2 shim; see migration_indices)."""
+        compat.deprecated("Policy.migration_index",
+                          "Policy.migration_indices")
         return int(math.ceil(self.boundaries[0])) if self.migrate_at_r else None
 
     def migration_indices(self) -> Tuple[int, ...]:
@@ -85,6 +83,9 @@ def from_plan(plan) -> Policy:
     """Executable policy from a ``shp.PlacementPlan`` (two-tier) or
     ``shp.NTierPlacementPlan`` (multi-threshold)."""
     if isinstance(plan, shp.NTierPlacementPlan):
+        if not plan.feasible:
+            raise ValueError("no feasible placement under the given "
+                             "constraints — relax capacities or the SLO")
         return Policy(boundaries=plan.boundaries, migrate_at_r=plan.migrate,
                       name=plan.strategy)
     s = plan.best.strategy
@@ -98,7 +99,10 @@ def from_plan(plan) -> Policy:
 
 
 def optimal_policy(cm: TwoTierCostModel | NTierCostModel,
-                   exact: bool = False) -> Policy:
+                   exact: bool = False, constraints=None) -> Policy:
     """The paper's end-to-end decision: closed-form thresholds, validity
-    gate, single-tier fallbacks — all before the stream starts (proactive)."""
-    return from_plan(shp.plan_placement(cm, exact=exact))
+    gate, single-tier fallbacks — all before the stream starts (proactive).
+    ``constraints`` (a ``core.constraints.ConstraintSet``) routes through
+    the resource-augmented constrained planner."""
+    return from_plan(shp.plan_placement(cm, exact=exact,
+                                        constraints=constraints))

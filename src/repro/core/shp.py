@@ -16,11 +16,13 @@ from __future__ import annotations
 
 import itertools
 import math
-from dataclasses import dataclass
-from typing import Literal, Sequence, Tuple
+from dataclasses import dataclass, field
+from typing import Literal, Optional, Sequence, Tuple
 
 import numpy as np
 
+from . import constraints as constraints_mod
+from .constraints import ConstraintSet, ReadLatencySLO, TierCapacity
 from .costs import NTierCostModel, TwoTierCostModel
 
 EULER_GAMMA = 0.5772156649015329
@@ -257,15 +259,29 @@ class PlacementPlan:
         return self.best.strategy == "two_tier_migration"
 
 
-def plan_placement(cm, exact: bool = False):
+def plan_placement(cm, exact: bool = False,
+                   constraints: Optional[ConstraintSet] = None):
     """Evaluate every strategy (respecting the eq. 22 validity gate) and pick
     the cheapest — this is the proactive decision made before the stream.
 
     Accepts a ``TwoTierCostModel`` (returns the paper's ``PlacementPlan``,
     unchanged) or an ``NTierCostModel`` (returns ``NTierPlacementPlan`` via
-    the multi-threshold solver)."""
+    the multi-threshold solver). A non-empty ``constraints`` routes
+    two-tier models through the constrained N-tier path (returning an
+    ``NTierPlacementPlan``)."""
     if isinstance(cm, NTierCostModel):
-        return plan_placement_ntier(cm)
+        return plan_placement_ntier(cm, constraints=constraints)
+    if constraints is not None and not constraints.empty:
+        if exact:
+            raise ValueError("the constrained planner uses the paper's "
+                             "approximate (logarithmic) forms — exact=True "
+                             "is not supported with constraints")
+        if any(isinstance(c, ReadLatencySLO) for c in constraints):
+            raise ValueError(
+                "two-tier legacy cost models carry no read latencies, so a "
+                "ReadLatencySLO would be vacuous — build an NTierCostModel "
+                "with TierSpec(read_latency_s=...) instead")
+        return plan_placement_ntier(cm.as_ntier(), constraints=constraints)
     cands = [cost_single_tier(cm, "a", exact), cost_single_tier(cm, "b", exact)]
     r_nm = r_optimal_no_migration(cm)
     r_mg = r_optimal_migration(cm)
@@ -333,41 +349,244 @@ def _cummin_with_arg(g: np.ndarray):
     return vals, args
 
 
-def _solve_boundaries(cw_s, lin_s, n, k, interior=False):
-    """Minimize the separable boundary objective for one strategy family.
-
-    cw_s/lin_s: (M, Ts) per-tier coefficient columns of the (sub)topology;
-    n/k: (M,). With ``interior=True`` boundaries are restricted to [K, N)
-    — the N-tier form of eq. 22's gate for the migration family, so the
-    reservoir is full at every cascade and the last tier is always reached.
-
-    Returns (interior_val (M,), bounds (M, Ts-1)): the sum of the boundary
-    terms at the optimum and the optimal boundary vector. The caller adds
-    the boundary-independent terms W(N)·cw_last + N·lin_last [+ storage
-    bound / eq. 19 charges].
-    """
-    m, ts = cw_s.shape
-    if ts == 1:
-        return np.zeros(m), np.zeros((m, 0))
-    kf = np.asarray(k, np.float64)
-    lo = np.minimum(kf, n) if interior else np.zeros(m)
-    hi = np.nextafter(n, 0.0) if interior else np.asarray(n, np.float64)
-    cands = [lo, np.minimum(kf, n), hi]
+def _crossover_candidates(cw_s, lin_s, kf, lo, hi):
+    """The eq. 17/21-style pairwise-crossover candidate columns shared by
+    both strategy families: one stationary point per tier pair, clipped
+    into the feasible boundary range."""
+    out = []
+    ts = cw_s.shape[1]
     for s, t in itertools.combinations(range(ts), 2):
         with np.errstate(divide="ignore", invalid="ignore"):
             b = kf * (cw_s[:, s] - cw_s[:, t]) / (lin_s[:, t] - lin_s[:, s])
         b = np.where(np.isfinite(b), b, 0.0)
-        cands.append(np.clip(b, lo, hi))
-    c = np.sort(np.stack(cands, axis=1), axis=1)  # (M, C)
-    w = _w_approx(c, kf[:, None])
-    fs = []
-    for j in range(1, ts):
-        f = ((cw_s[:, j - 1] - cw_s[:, j])[:, None] * w
-             + (lin_s[:, j - 1] - lin_s[:, j])[:, None] * c)
-        fs.append(f)
+        out.append(np.clip(b, lo, hi))
+    return out
+
+
+@dataclass
+class BoundaryObjective:
+    """One strategy family's separable boundary objective over a tier
+    subset, plus the feasibility structure a ``ConstraintSet`` induces.
+
+    The cost side is the same piecewise form the unconstrained planner
+    minimizes: per-boundary terms ``f_j(b) = Δcw_j·W(b) + Δlin_j·b`` on a
+    finite candidate grid (endpoints, the b=K kink, pairwise crossovers,
+    and — when constrained — capacity corners and SLO-tight points). The
+    constraint side compiles to three mechanisms the solver understands:
+
+    * per-boundary masks (first/last-tier capacity, folded into the terms
+      as +inf),
+    * pairwise lower bounds ``b_{j-1} >= lb_j(b_j)`` (middle-tier
+      capacity: ``min(b_j,K)(1 − b_{j-1}/b_j) <= C``),
+    * a quantized latency budget (the read-path SLO, telescoped to a
+      per-boundary consumption ``δ_j(b) = b·(lat_{j-1}−lat_j)/N``).
+
+    With no constraints all three collapse and the solver reduces to the
+    unconstrained monotone DP bit-exactly.
+    """
+
+    cw_s: np.ndarray  # (M, Ts)
+    lin_s: np.ndarray  # (M, Ts)
+    n: np.ndarray  # (M,)
+    k: np.ndarray  # (M,)
+    interior: bool = False  # migration family: boundaries in [K, N)
+    cap_s: Optional[np.ndarray] = None  # (M, Ts) per-tier doc capacity
+    lat_s: Optional[np.ndarray] = None  # (M, Ts) per-tier read latency
+    slo: Optional[np.ndarray] = None  # (M,) expected-read-latency bound
+    qmax: int = 48  # latency-budget quantization levels
+
+    def __post_init__(self):
+        m, ts = self.cw_s.shape
+        self.m, self.ts = m, ts
+        self.kf = np.asarray(self.k, np.float64)
+        self.nf = np.asarray(self.n, np.float64)
+        if self.cap_s is None:
+            self.cap_s = np.full((m, ts), np.inf)
+        if self.lat_s is None:
+            self.lat_s = np.zeros((m, ts))
+        if self.slo is None:
+            self.slo = np.full(m, np.inf)
+        self.lo = np.minimum(self.kf, self.nf) if self.interior \
+            else np.zeros(m)
+        self.hi = np.nextafter(self.nf, 0.0) if self.interior else self.nf
+
+    @property
+    def constrained(self) -> bool:
+        return bool(np.any(np.isfinite(self.cap_s))
+                    or np.any(np.isfinite(self.slo)))
+
+    def subset_feasible(self) -> np.ndarray:
+        """(M,) boundary-free feasibility of this family/subset.
+
+        Single-tier subsets hold the whole reservoir: occupancy K and the
+        final read from that tier. The migration family holds the whole
+        reservoir in every used tier (boundaries gated to [K, N)), so a
+        capacity below K on any used tier — or a last-tier latency above
+        the SLO — kills the whole cascade subset.
+        """
+        kmin = np.minimum(self.kf, self.nf)
+        tol = 1.0 + 1e-12
+        if self.ts == 1:
+            return ((kmin <= self.cap_s[:, 0] * tol)
+                    & (self.lat_s[:, 0] <= self.slo * tol))
+        if self.interior:
+            return (np.all(self.cap_s * tol >= kmin[:, None], axis=1)
+                    & (self.lat_s[:, -1] <= self.slo * tol))
+        return np.ones(self.m, bool)
+
+    def candidates(self) -> np.ndarray:
+        """(M, C) sorted candidate grid: {lo, K, hi} ∪ pairwise crossovers
+        ∪ (when constrained) capacity corners and SLO-tight points."""
+        lo, hi, kf, nf = self.lo, self.hi, self.kf, self.nf
+        cands = [lo, np.minimum(kf, nf), hi]
+        cands += _crossover_candidates(self.cw_s, self.lin_s, kf, lo, hi)
+        for j in range(self.ts):
+            cap_j = self.cap_s[:, j]
+            fin = np.isfinite(cap_j)
+            if np.any(fin):
+                # first-tier corner b = C_j and last-tier corner
+                # b = N(1 − C_j/K) — where the capacity masks go tight
+                cands.append(np.clip(np.where(fin, cap_j, 0.0), lo, hi))
+                with np.errstate(invalid="ignore"):
+                    tight = nf * (1.0 - cap_j / kf)
+                cands.append(np.clip(np.where(fin, tight, 0.0), lo, hi))
+        if np.any(np.isfinite(self.slo)) and not self.interior:
+            for s, t in itertools.combinations(range(self.ts), 2):
+                dl = self.lat_s[:, s] - self.lat_s[:, t]
+                with np.errstate(divide="ignore", invalid="ignore"):
+                    b = nf * (self.slo - self.lat_s[:, t]) / dl
+                b = np.where(np.isfinite(b), b, 0.0)
+                cands.append(np.clip(b, lo, hi))
+        if not self.interior:
+            cands += self._middle_cap_stationary(lo, hi)
+        return np.sort(np.stack(cands, axis=1), axis=1)
+
+    def _middle_cap_stationary(self, lo, hi) -> list:
+        """Stationary points along an *active* middle-tier capacity curve.
+
+        When tier ``idx`` (between boundaries idx and idx+1) binds with
+        C < K, the feasible frontier is b_idx = γ·b_{idx+1} with
+        γ = 1 − C/K (for b_{idx+1} > K). Substituting into the two
+        boundary terms gives a 1-D objective whose stationary point is
+        closed-form on each W-branch; both it and its γ-image join the
+        candidate grid so the enumerated solve stays exact when the
+        constraint is active between two interior boundaries.
+        """
+        out = []
+        kf = self.kf
+        for idx in range(1, self.ts - 1):
+            cap_m = self.cap_s[:, idx]
+            active = np.isfinite(cap_m) & (cap_m < kf)
+            if not np.any(active):
+                continue
+            with np.errstate(divide="ignore", invalid="ignore"):
+                gamma = 1.0 - cap_m / kf
+            dcw_p = self.cw_s[:, idx - 1] - self.cw_s[:, idx]
+            dcw_d = self.cw_s[:, idx] - self.cw_s[:, idx + 1]
+            dlin_p = self.lin_s[:, idx - 1] - self.lin_s[:, idx]
+            dlin_d = self.lin_s[:, idx] - self.lin_s[:, idx + 1]
+            with np.errstate(divide="ignore", invalid="ignore"):
+                # both boundaries on the log branch (b_prev, b_dest > K)
+                b_log = -kf * (dcw_p + dcw_d) / (gamma * dlin_p + dlin_d)
+                # prev on the linear branch (b_prev <= K < b_dest)
+                b_mix = -kf * dcw_d / (gamma * (dcw_p + dlin_p) + dlin_d)
+            for b in (b_log, b_mix):
+                b = np.where(active & np.isfinite(b) & (b > 0), b, 0.0)
+                out.append(np.clip(b, lo, hi))
+                out.append(np.clip(b * np.where(active, gamma, 0.0), lo, hi))
+        return out
+
+    def terms(self, c: np.ndarray) -> list:
+        """Per-boundary cost terms f_j on grid ``c``, with the first/last
+        tier capacity masks folded in as +inf."""
+        w = _w_approx(c, self.kf[:, None])
+        fs = []
+        for j in range(1, self.ts):
+            f = ((self.cw_s[:, j - 1] - self.cw_s[:, j])[:, None] * w
+                 + (self.lin_s[:, j - 1] - self.lin_s[:, j])[:, None] * c)
+            fs.append(f)
+        if self.constrained and not self.interior:
+            tol = 1.0 + 1e-12
+            first_ok = (np.minimum(c, self.kf[:, None])
+                        <= self.cap_s[:, 0][:, None] * tol)
+            fs[0] = np.where(first_ok, fs[0], np.inf)
+            last_occ = (np.minimum(self.nf, self.kf)[:, None]
+                        * (1.0 - c / self.nf[:, None]))
+            last_ok = last_occ <= self.cap_s[:, -1][:, None] * tol
+            fs[-1] = np.where(last_ok, fs[-1], np.inf)
+        return fs
+
+    def pair_lower_bound(self, idx: int, c: np.ndarray):
+        """Lower bound on boundary ``idx`` given boundary ``idx+1`` = c —
+        the middle-tier capacity ``min(c,K)(1 − b_prev/c) <= C`` solved
+        for b_prev. None when tier ``idx`` is uncapped (transition is then
+        the plain running minimum)."""
+        if self.interior:
+            return None
+        cap_m = self.cap_s[:, idx]
+        if not np.any(np.isfinite(cap_m)):
+            return None
+        with np.errstate(divide="ignore", invalid="ignore"):
+            slack = 1.0 - cap_m[:, None] / np.minimum(c, self.kf[:, None])
+            lb = c * np.maximum(0.0, slack)
+        lb = np.where(np.isfinite(cap_m)[:, None] & (c > 0),
+                      np.nan_to_num(lb, nan=0.0, posinf=0.0), 0.0)
+        return lb
+
+    def budget_deltas(self, c: np.ndarray):
+        """Exact per-boundary latency consumption δ_j(b) = b·(lat_{j-1} −
+        lat_j)/N (the telescoped E[read latency] minus the lat_last
+        constant) and the per-stream budget Σδ_j must respect:
+        rhs = slo − lat_last. None when no SLO is active (or for the
+        migration family, whose final read latency is a subset constant).
+        """
+        if self.interior or not np.any(np.isfinite(self.slo)):
+            return None
+        deltas = [c * ((self.lat_s[:, j - 1] - self.lat_s[:, j])
+                       / self.nf)[:, None]
+                  for j in range(1, self.ts)]
+        rhs = self.slo - self.lat_s[:, -1]
+        return deltas, rhs
+
+    def budget(self, c: np.ndarray):
+        """Quantized read-latency budget for the resource-augmented DP
+        (used for deep hierarchies, J >= 4 boundaries): per-boundary
+        integer consumption levels (conservatively rounded up, so
+        DP-feasible implies truly feasible) and per-stream level caps.
+        None when no SLO is active or for the migration family (whose
+        final read latency is a subset-level constant)."""
+        exact = self.budget_deltas(c)
+        if exact is None:
+            return None
+        deltas, rhs_exact = exact
+        dmin = [d.min(axis=1) for d in deltas]
+        dmax = [d.max(axis=1) for d in deltas]
+        total_range = sum(dx - dn for dx, dn in zip(dmax, dmin))
+        denom = max(self.qmax - (self.ts - 1), 1)
+        step = total_range / denom
+        levels = []
+        for d, dn in zip(deltas, dmin):
+            with np.errstate(divide="ignore", invalid="ignore"):
+                lv = np.ceil((d - dn[:, None]) / step[:, None] - 1e-9)
+            lv = np.where(step[:, None] > 0, lv, 0.0)
+            levels.append(np.clip(lv, 0, self.qmax).astype(np.int64))
+        rhs = rhs_exact - sum(dmin)
+        with np.errstate(divide="ignore", invalid="ignore"):
+            cap_lv = np.floor(rhs / step + 1e-9)
+        cap_lv = np.where(step > 0, cap_lv,
+                          np.where(rhs >= -1e-12, self.qmax + 1.0, -1.0))
+        cap_lv = np.where(np.isfinite(self.slo), cap_lv, self.qmax + 1.0)
+        cap_levels = np.clip(cap_lv, -1, self.qmax + 1).astype(np.int64)
+        return levels, cap_levels, self.qmax + 2
+
+
+def _solve_unconstrained(fs, c):
+    """The original monotone DP: running minima left to right (first
+    minimum wins), backtracked to the optimal boundary vector."""
+    m = c.shape[0]
     g = fs[0]
     args = []
-    for j in range(1, ts - 1):
+    for j in range(1, len(fs)):
         vals, arg = _cummin_with_arg(g)
         args.append(arg)
         g = fs[j] + vals
@@ -381,6 +600,155 @@ def _solve_boundaries(cw_s, lin_s, n, k, interior=False):
     order = np.stack(list(reversed(idx)), axis=1)  # (M, Ts-1)
     bounds = c[rows[:, None], order]
     return interior, bounds
+
+
+_ENUM_MAX_STEPS = 3  # exact joint solve up to 4-tier topologies
+_ENUM_CHUNK_CELLS = 20_000_000  # memory guard for the (M, G) grids
+
+
+def _solve_constrained_enum(obj: BoundaryObjective, fs, c):
+    """Exact constrained solve for shallow hierarchies (J <= 3 boundary
+    steps, i.e. up to 4 tiers): enumerate every monotone index tuple over
+    the candidate grid and mask infeasible tuples — middle-tier capacity
+    as pairwise lower bounds, the read-path SLO as an exact (not
+    quantized) budget sum. Because the grid contains the capacity corners
+    and SLO-tight points, the feasible optimum of the continuous problem
+    is on the grid up to crossover-vs-constraint interactions (verified
+    against the brute-force feasible grid). Deeper hierarchies take the
+    quantized resource DP instead."""
+    m, ncand = c.shape
+    nsteps = len(fs)
+    combos = np.array(list(itertools.combinations_with_replacement(
+        range(ncand), nsteps)), np.int64)  # (G, J) monotone by construction
+    g = combos.shape[0]
+    lbs = [obj.pair_lower_bound(idx, c) for idx in range(1, nsteps)]
+    budget = obj.budget_deltas(c)
+    rows = np.arange(m)
+    chunk = max(1, _ENUM_CHUNK_CELLS // max(g, 1))
+    interior = np.empty(m)
+    order = np.empty((m, nsteps), np.int64)
+    for s in range(0, m, chunk):
+        sl = slice(s, min(s + chunk, m))
+        total = fs[0][sl][:, combos[:, 0]]
+        for j in range(1, nsteps):
+            total = total + fs[j][sl][:, combos[:, j]]
+        for idx in range(1, nsteps):
+            lb = lbs[idx - 1]
+            if lb is None:
+                continue
+            prev_val = c[sl][:, combos[:, idx - 1]]
+            lb_dest = lb[sl][:, combos[:, idx]]
+            total = np.where(prev_val >= lb_dest * (1 - 1e-12) - 1e-12,
+                             total, np.inf)
+        if budget is not None:
+            deltas, rhs = budget
+            acc = deltas[0][sl][:, combos[:, 0]]
+            scale = np.abs(deltas[0][sl]).max(1)
+            for j in range(1, nsteps):
+                acc = acc + deltas[j][sl][:, combos[:, j]]
+                scale = scale + np.abs(deltas[j][sl]).max(1)
+            atol = 1e-9 * (np.abs(rhs[sl]) + scale) + 1e-15
+            total = np.where(acc <= (rhs[sl] + atol)[:, None], total, np.inf)
+        best = np.argmin(total, axis=1)
+        interior[sl] = total[np.arange(total.shape[0]), best]
+        order[sl] = combos[best]
+    bounds = c[rows[:, None], order]
+    return interior, bounds
+
+
+def _solve_resource_dp(obj: BoundaryObjective, fs, c):
+    """Resource-augmented DP over (boundary step, candidate, remaining
+    latency budget): the constrained replacement for the plain monotone
+    DP. Middle-tier capacities enter as pairwise transition bounds,
+    the SLO as a quantized budget axis (conservatively rounded, so
+    DP-feasible implies truly feasible). With no active constraints this
+    reduces term-for-term to ``_solve_unconstrained`` (asserted by the
+    bit-match property tests)."""
+    m, ncand = c.shape
+    nsteps = len(fs)
+    budget = obj.budget(c)
+    lbs = [obj.pair_lower_bound(idx, c) for idx in range(1, nsteps)]
+    if budget is None and all(lb is None for lb in lbs):
+        return _solve_unconstrained(fs, c)
+    if nsteps <= _ENUM_MAX_STEPS:
+        return _solve_constrained_enum(obj, fs, c)
+    if budget is None:
+        levels = [np.zeros((m, ncand), np.int64)] * nsteps
+        cap_levels, q = np.zeros(m, np.int64), 1
+    else:
+        levels, cap_levels, q = budget
+    rows = np.arange(m)
+    crange = np.arange(ncand)
+    d = np.full((m, ncand, q), np.inf)
+    d[rows[:, None], crange[None, :], levels[0]] = fs[0]
+    trace = []
+    for step in range(1, nsteps):
+        lb = lbs[step - 1]
+        p = np.empty_like(d)
+        amin = np.empty((m, ncand, q), np.int64)
+        if lb is None:
+            for qi in range(q):
+                p[:, :, qi], amin[:, :, qi] = _cummin_with_arg(d[:, :, qi])
+        else:
+            # first candidate index satisfying b_prev >= lb(c), per (m, c)
+            lb_idx = (c[:, None, :] < lb[:, :, None]).sum(-1)
+            allow = ((crange[None, None, :] <= crange[None, :, None])
+                     & (crange[None, None, :] >= lb_idx[:, :, None]))
+            for qi in range(q):
+                masked = np.where(allow, d[:, None, :, qi], np.inf)
+                amin[:, :, qi] = np.argmin(masked, axis=2)
+                p[:, :, qi] = np.take_along_axis(
+                    masked, amin[:, :, qi][..., None], 2)[..., 0]
+        trace.append(amin)
+        lv = levels[step]
+        q_src = np.arange(q)[None, None, :] - lv[:, :, None]
+        gathered = np.take_along_axis(p, np.clip(q_src, 0, q - 1), axis=2)
+        d = np.where(q_src >= 0, gathered, np.inf) + fs[step][:, :, None]
+    feas = np.arange(q)[None, None, :] <= cap_levels[:, None, None]
+    flat = np.where(feas, d, np.inf).reshape(m, -1)
+    best = np.argmin(flat, axis=1)
+    interior = flat[rows, best]
+    best_c, best_q = best // q, best % q
+    idx = [best_c]
+    for step in range(nsteps - 1, 0, -1):
+        best_q = np.clip(best_q - levels[step][rows, best_c], 0, q - 1)
+        best_c = trace[step - 1][rows, best_c, best_q]
+        idx.append(best_c)
+    order = np.stack(list(reversed(idx)), axis=1)
+    bounds = c[rows[:, None], order]
+    return interior, bounds
+
+
+def _solve_boundaries(cw_s, lin_s, n, k, interior=False, *, cap_s=None,
+                      lat_s=None, slo=None):
+    """Minimize the separable boundary objective for one strategy family.
+
+    cw_s/lin_s: (M, Ts) per-tier coefficient columns of the (sub)topology;
+    n/k: (M,). With ``interior=True`` boundaries are restricted to [K, N)
+    — the N-tier form of eq. 22's gate for the migration family, so the
+    reservoir is full at every cascade and the last tier is always reached.
+    ``cap_s``/``lat_s``/``slo`` activate the constrained solver
+    (``BoundaryObjective`` + resource-augmented DP); left at None the
+    original unconstrained closed form runs unchanged.
+
+    Returns (interior_val (M,), bounds (M, Ts-1)): the sum of the boundary
+    terms at the optimum (+inf where no feasible vector exists) and the
+    optimal boundary vector. The caller adds the boundary-independent
+    terms W(N)·cw_last + N·lin_last [+ storage bound / eq. 19 charges].
+    """
+    obj = BoundaryObjective(cw_s=cw_s, lin_s=lin_s, n=n, k=k,
+                            interior=interior, cap_s=cap_s, lat_s=lat_s,
+                            slo=slo)
+    ok = obj.subset_feasible()
+    if obj.ts == 1:
+        return np.where(ok, 0.0, np.inf), np.zeros((obj.m, 0))
+    c = obj.candidates()
+    fs = obj.terms(c)
+    if obj.constrained and not obj.interior:
+        interior_val, bounds = _solve_resource_dp(obj, fs, c)
+    else:
+        interior_val, bounds = _solve_unconstrained(fs, c)
+    return np.where(ok, interior_val, np.inf), bounds
 
 
 def _tier_subsets(t: int):
@@ -408,7 +776,8 @@ def _cascade_fee(cr, cw, used_cols):
     return fee
 
 
-def plan_ntier_arrays(cw, cr, cs, n, k, rpw):
+def plan_ntier_arrays(cw, cr, cs, n, k, rpw, *, cap=None, lat=None,
+                      slo=None, force_constrained=False):
     """Vectorized multi-threshold planner over M streams sharing one tier
     count T. cw/cr/cs: (M, T); n/k/rpw: (M,). Returns a dict with
     ``total`` (M,), ``bounds`` (M, T-1) full-topology boundary vectors,
@@ -422,6 +791,15 @@ def plan_ntier_arrays(cw, cr, cs, n, k, rpw):
     the constant eq. 19 charge K·(cr_u + cw_v) per traversed tier pair;
     the final read is excluded, generalizing eq. 20 — for T=2 this
     objective is exactly the paper's ``cost_with_migration``.
+
+    Constraints enter as vectorized feasibility structure over the (M, T)
+    boundary batch: ``cap`` (M, T) per-tier document capacities, ``lat``
+    (M, T) per-tier read latencies, ``slo`` (M,) expected-read-latency
+    bounds (all optional, +inf = unconstrained). When every entry is
+    trivial the unconstrained closed form runs unchanged — bit-exactly —
+    unless ``force_constrained`` routes through the resource-augmented DP
+    anyway (the bit-match property tests use this). Streams with no
+    feasible plan return ``total = +inf``.
     """
     cw = np.asarray(cw, np.float64)
     cr = np.asarray(cr, np.float64)
@@ -432,6 +810,13 @@ def plan_ntier_arrays(cw, cr, cs, n, k, rpw):
     m, t = cw.shape
     if t > MAX_TIERS:
         raise ValueError(f"topologies over {MAX_TIERS} tiers not supported")
+    constrained = force_constrained or not constraints_mod.trivial(cap, slo)
+    if constrained:
+        cap = (np.full((m, t), np.inf) if cap is None
+               else np.asarray(cap, np.float64))
+        lat = np.zeros((m, t)) if lat is None else np.asarray(lat, np.float64)
+        slo = (np.full(m, np.inf) if slo is None
+               else np.asarray(slo, np.float64))
     w_n = _w_approx(n, k)
     best_total = np.full(m, np.inf)
     best_bounds = np.zeros((m, t - 1))
@@ -439,7 +824,9 @@ def plan_ntier_arrays(cw, cr, cs, n, k, rpw):
     for sub in _tier_subsets(t):
         sa = np.asarray(sub)
         lin = (rpw * k / n)[:, None] * cr[:, sa]
-        interior, sub_bounds = _solve_boundaries(cw[:, sa], lin, n, k)
+        kw = (dict(cap_s=cap[:, sa], lat_s=lat[:, sa], slo=slo)
+              if constrained else {})
+        interior, sub_bounds = _solve_boundaries(cw[:, sa], lin, n, k, **kw)
         total = (interior + w_n * cw[:, sa[-1]] + n * lin[:, -1]
                  + k * np.max(cs[:, sa], axis=1))
         edges = np.concatenate([np.zeros((m, 1)), sub_bounds, n[:, None]], 1)
@@ -452,8 +839,10 @@ def plan_ntier_arrays(cw, cr, cs, n, k, rpw):
     lin_mig = (k / n)[:, None] * cs
     for sub in _cascade_subsets(t):
         sa = np.asarray(sub)
+        kw = (dict(cap_s=cap[:, sa], lat_s=lat[:, sa], slo=slo)
+              if constrained else {})
         interior, sub_bounds = _solve_boundaries(cw[:, sa], lin_mig[:, sa],
-                                                 n, k, interior=True)
+                                                 n, k, interior=True, **kw)
         total = (interior + w_n * cw[:, -1] + n * lin_mig[:, -1]
                  + k * _cascade_fee(cr, cw, sub))
         edges = np.concatenate([np.zeros((m, 1)), sub_bounds, n[:, None]], 1)
@@ -576,7 +965,9 @@ def cost_ntier_migration(cm: NTierCostModel, bounds,
 @dataclass(frozen=True)
 class NTierPlacementPlan:
     """Outcome of the N-tier decision procedure: the cheapest of the
-    no-migration family (over all tier subsets) and the migration cascade."""
+    no-migration family (over all tier subsets) and the migration cascade.
+    Constrained plans with no feasible boundary vector carry
+    ``total = +inf`` (``feasible`` is False)."""
 
     best: NTierStrategyCost
     boundaries: Tuple[float, ...]
@@ -593,18 +984,65 @@ class NTierPlacementPlan:
         return self.best.total
 
     @property
+    def feasible(self) -> bool:
+        return math.isfinite(self.best.total)
+
+    @property
     def r(self) -> float:
         """First changeover index (the T=2 shim)."""
         return self.boundaries[0]
 
 
-def plan_placement_ntier(cm: NTierCostModel) -> NTierPlacementPlan:
-    """Single-stream N-tier plan (the M=1 view of ``plan_ntier_arrays``)."""
+def resolve_constraints(cm: NTierCostModel,
+                        constraints: Optional[ConstraintSet]):
+    """(cap (T,), lat (T,), slo, cset): the compiled constraint arrays for
+    one model.
+
+    Topology-declared capacities (``TierSpec.capacity_docs`` — physical
+    properties of the hierarchy) always apply; an explicit
+    ``ConstraintSet`` *overrides per tier*: a ``TierCapacity`` entry on
+    tier t replaces the declaration there (so ``TierCapacity(t, inf)``
+    explicitly lifts it), and declarations on other tiers persist. SLOs
+    come only from the explicit set.
+    """
+    cset = constraints if constraints is not None else ConstraintSet()
+    if cset.shared_capacities:
+        raise ValueError(
+            "shared capacities are fleet-wide budgets — plan via "
+            "plan_fleet_mixed, which splits them by water-filling")
+    _, lat, slo = cset.tier_arrays(cm)
+    cap = constraints_mod.effective_capacity(cset, cm)
+    return cap, lat, slo, cset
+
+
+def _infeasible_plan(cm: NTierCostModel) -> NTierPlacementPlan:
+    sc = NTierStrategyCost("infeasible", tuple([0.0] * (cm.t - 1)),
+                           float("inf"), tuple([0.0] * cm.t), 0.0, 0.0, 0.0)
+    return NTierPlacementPlan(best=sc, boundaries=tuple([0.0] * (cm.t - 1)),
+                              migrate=False, n_docs=cm.workload.n_docs,
+                              t=cm.t)
+
+
+def plan_placement_ntier(cm: NTierCostModel,
+                         constraints: Optional[ConstraintSet] = None
+                         ) -> NTierPlacementPlan:
+    """Single-stream N-tier plan (the M=1 view of ``plan_ntier_arrays``).
+
+    With ``constraints`` (or topology-declared tier capacities) the
+    resource-augmented DP plans under per-tier capacities and the
+    read-path SLO; an empty/trivial ``ConstraintSet`` reproduces the
+    unconstrained plan bit-identically (same code path).
+    """
     wl = cm.workload
+    cap, lat, slo, _ = resolve_constraints(cm, constraints)
     out = plan_ntier_arrays(cm.cw[None, :], cm.cr[None, :], cm.cs[None, :],
                             np.array([float(wl.n_docs)]),
                             np.array([float(wl.k)]),
-                            np.array([wl.reads_per_window]))
+                            np.array([wl.reads_per_window]),
+                            cap=cap[None, :], lat=lat[None, :],
+                            slo=np.array([slo]))
+    if not np.isfinite(out["total"][0]):
+        return _infeasible_plan(cm)
     bounds = tuple(float(b) for b in out["bounds"][0])
     migrate = bool(out["migrate"][0])
     fn = cost_ntier_migration if migrate else cost_ntier_no_migration
@@ -612,8 +1050,9 @@ def plan_placement_ntier(cm: NTierCostModel) -> NTierPlacementPlan:
                               migrate=migrate, n_docs=wl.n_docs, t=cm.t)
 
 
-def plan_ntier_batch(models: Sequence[NTierCostModel]):
+def plan_ntier_batch(models: Sequence[NTierCostModel], constraints=None):
     """Vectorized plan for a batch of N-tier models sharing one T.
+    ``constraints`` is a shared ``ConstraintSet`` or one per model.
     Returns (total (M,), bounds (M, T-1), migrate (M,), strategies list)."""
     t = models[0].t
     if any(m.t != t for m in models):
@@ -624,21 +1063,54 @@ def plan_ntier_batch(models: Sequence[NTierCostModel]):
     n = np.array([float(m.workload.n_docs) for m in models])
     k = np.array([float(m.workload.k) for m in models])
     rpw = np.array([m.workload.reads_per_window for m in models])
-    out = plan_ntier_arrays(cw, cr, cs, n, k, rpw)
-    strategies = [ntier_strategy_name(out["bounds"][i], n[i], t,
-                                      bool(out["migrate"][i]))
+    per_model = (constraints if isinstance(constraints, (list, tuple))
+                 else [constraints] * len(models))
+    compiled = [resolve_constraints(m, c)
+                for m, c in zip(models, per_model)]
+    cap = np.stack([c[0] for c in compiled])
+    lat = np.stack([c[1] for c in compiled])
+    slo = np.array([c[2] for c in compiled])
+    out = plan_ntier_arrays(cw, cr, cs, n, k, rpw, cap=cap, lat=lat, slo=slo)
+    strategies = [("infeasible" if not np.isfinite(out["total"][i])
+                   else ntier_strategy_name(out["bounds"][i], n[i], t,
+                                            bool(out["migrate"][i])))
                   for i in range(len(models))]
     return out["total"], out["bounds"], out["migrate"], strategies
 
 
-def brute_force_plan_ntier(cm: NTierCostModel, grid: int = 48):
+def brute_force_plan_ntier(cm: NTierCostModel, grid: int = 48,
+                           constraints: Optional[ConstraintSet] = None):
     """Ground-truth verifier: grid search over monotone boundary vectors
     for both strategy families (same objectives as the closed form).
-    Returns (total, bounds tuple, migrate)."""
+    With ``constraints`` the grid becomes a *feasible* grid: expected
+    occupancy high-water marks and read latency are evaluated per combo
+    and infeasible vectors are masked to +inf (generic constraint types
+    fall back to their ``feasible`` predicate row by row).
+    Returns (total, bounds tuple, migrate); total is +inf when no grid
+    point is feasible."""
     wl = cm.workload
     n, k, t = float(wl.n_docs), float(wl.k), cm.t
-    vals = np.unique(np.concatenate([
-        [0.0, min(k, n), n], np.geomspace(1.0, n, grid)]))
+    cset = constraints if constraints is not None else ConstraintSet()
+    # topology-declared capacities are enforced exactly like the planner's
+    # resolve pass, so the verifier's ground truth stays comparable
+    cap_r, lat_r, slo_r, _ = resolve_constraints(cm, constraints)
+    active = (not cset.empty or np.any(np.isfinite(cap_r))
+              or np.isfinite(slo_r))
+    cap = lat = None
+    slo = np.inf
+    extra_vals = []
+    if active:
+        cap, lat, slo = cap_r, lat_r, slo_r
+        for c_t in cap[np.isfinite(cap)]:
+            extra_vals += [c_t, n * (1.0 - c_t / k)]
+        if np.isfinite(slo):
+            for s, u in itertools.combinations(range(t), 2):
+                if lat[s] != lat[u]:
+                    extra_vals.append(n * (slo - lat[u]) / (lat[s] - lat[u]))
+    vals = np.unique(np.clip(np.concatenate([
+        [0.0, min(k, n), np.nextafter(n, 0.0), n],
+        np.geomspace(1.0, n, grid),
+        np.asarray(extra_vals, np.float64)]), 0.0, n))
     combos = np.array(list(
         itertools.combinations_with_replacement(vals, t - 1)))
     edges = np.concatenate([np.zeros((combos.shape[0], 1)), combos,
@@ -667,7 +1139,34 @@ def brute_force_plan_ntier(cm: NTierCostModel, grid: int = 48):
         fee = fee + np.where(hop, cm.cr[prev] + cm.cw[t_i], 0.0)
         prev = np.where(used[:, t_i], t_i, prev)
     tot_mg = np.where(valid, writes + k * (frac @ cm.cs) + k * fee, np.inf)
+    if cap is not None:
+        tol = 1.0 + 1e-9
+        gn = np.full(g, n)
+        gk = np.full(g, k)
+        occ_nm = constraints_mod.peak_occupancy_arrays(
+            combos, gn, gk, np.zeros(g, bool))
+        occ_mg = constraints_mod.peak_occupancy_arrays(
+            combos, gn, gk, np.ones(g, bool))
+        tot_nm = np.where(np.all(occ_nm <= cap[None, :] * tol, axis=1),
+                          tot_nm, np.inf)
+        tot_mg = np.where(np.all(occ_mg <= cap[None, :] * tol, axis=1),
+                          tot_mg, np.inf)
+        if np.isfinite(slo):
+            tot_nm = np.where(frac @ lat <= slo * tol, tot_nm, np.inf)
+            tot_mg = np.where(lat[-1] <= slo * tol, tot_mg, np.inf)
+        generic = [c for c in cset
+                   if not isinstance(c, (TierCapacity, ReadLatencySLO))]
+        for con in generic:
+            for i in range(g):
+                if np.isfinite(tot_nm[i]) and \
+                        not con.feasible(cm, combos[i], False):
+                    tot_nm[i] = np.inf
+                if np.isfinite(tot_mg[i]) and \
+                        not con.feasible(cm, combos[i], True):
+                    tot_mg[i] = np.inf
     i_nm, i_mg = int(np.argmin(tot_nm)), int(np.argmin(tot_mg))
+    if not np.isfinite(tot_nm[i_nm]) and not np.isfinite(tot_mg[i_mg]):
+        return float("inf"), tuple(np.zeros(t - 1)), False
     if tot_nm[i_nm] <= tot_mg[i_mg]:
         return float(tot_nm[i_nm]), tuple(combos[i_nm]), False
     return float(tot_mg[i_mg]), tuple(combos[i_mg]), True

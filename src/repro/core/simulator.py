@@ -5,6 +5,13 @@ placement policy, accounting every transaction, byte moved, and doc-month of
 rental. Used to validate the analytic model (tests assert the simulated cost
 matches `core.shp` expectations on randomly-ordered traces — per tier for
 N-tier topologies) and to reproduce Fig. 8's cumulative-writes comparison.
+
+Constraint-aware additions: per-tier occupancy high-water marks (sampled at
+the end of each document step) and the realized per-survivor read latency,
+so capacity / SLO violations surface at reconciliation
+(``SimResult.check_constraints``), not just at planning time. Tiers with a
+minimum storage duration (``TierCosts.min_storage_days``) bill every stay
+topped up to the minimum — the S3-IA / Glacier early-delete convention.
 """
 from __future__ import annotations
 
@@ -14,8 +21,9 @@ from typing import Optional, Union
 
 import numpy as np
 
+from .compat import TIER_A, TIER_B  # noqa: F401  (canonical home: compat)
 from .costs import NTierCostModel, TwoTierCostModel
-from .placement import Policy, TIER_A, TIER_B
+from .placement import Policy
 
 
 @dataclass
@@ -31,6 +39,9 @@ class SimResult:
     survivor_ids: np.ndarray  # (k,) stream indices of final top-K
     migrated_per_boundary: np.ndarray = field(
         default_factory=lambda: np.zeros(1, np.int64))  # (T-1,) hops per boundary
+    occupancy_hwm_per_tier: np.ndarray = field(
+        default_factory=lambda: np.zeros(1, np.int64))  # (T,) peak residents
+    read_latency_mean: float = 0.0  # realized per-survivor read latency (s)
     cost_writes: float = 0.0
     cost_reads: float = 0.0
     cost_storage: float = 0.0
@@ -39,6 +50,26 @@ class SimResult:
     @property
     def cost_total(self) -> float:
         return self.cost_writes + self.cost_reads + self.cost_storage + self.cost_migration
+
+    def check_constraints(self, constraint_set, cost_model) -> dict:
+        """Reconciliation-time violation report against a
+        ``core.constraints.ConstraintSet``: compares the *realized*
+        occupancy high-water marks and read latency with the declared
+        capacities / SLO. Returns per-tier boolean masks and an ``ok``
+        flag."""
+        from .constraints import effective_capacity
+        nt = (cost_model.as_ntier()
+              if isinstance(cost_model, TwoTierCostModel) else cost_model)
+        cap = effective_capacity(constraint_set, nt)
+        t = self.occupancy_hwm_per_tier.shape[0]
+        capacity_violations = self.occupancy_hwm_per_tier > cap[:t]
+        slo = constraint_set.max_read_latency
+        slo_violation = bool(self.read_latency_mean > slo)
+        return {
+            "capacity_violations": capacity_violations,
+            "slo_violation": slo_violation,
+            "ok": not (capacity_violations.any() or slo_violation),
+        }
 
 
 CostModel = Union[TwoTierCostModel, NTierCostModel]
@@ -83,6 +114,8 @@ def simulate(scores: np.ndarray, k: int, policy: Policy,
     migrated_per_boundary = np.zeros(max(t_tiers - 1, 1), dtype=np.int64)
     mig_reads = np.zeros(t_tiers, dtype=np.int64)  # cascade hops out of tier
     mig_writes = np.zeros(t_tiers, dtype=np.int64)  # cascade hops into tier
+    occupancy = np.zeros(t_tiers, dtype=np.int64)
+    occupancy_hwm = np.zeros(t_tiers, dtype=np.int64)
     evictions = 0
     mig_ats = policy.migration_indices()  # one trigger per boundary, or ()
     floor = 0  # highest fired boundary: writes/residents never go below it
@@ -90,11 +123,15 @@ def simulate(scores: np.ndarray, k: int, policy: Policy,
 
     wl = cost_model.workload if cost_model is not None else None
     month_per_doc_slot = (wl.window_months / n) if wl is not None else 0.0
+    min_months = (nt.min_storage_months if nt is not None
+                  else np.zeros(t_tiers))
 
     def _charge_rental(doc: int, end_i: int):
         nonlocal doc_months
         t = tier_of_doc[doc]
-        doc_months[t] += (end_i - write_index[doc]) * month_per_doc_slot
+        # minimum-storage-duration billing: every stay is topped up
+        months = (end_i - write_index[doc]) * month_per_doc_slot
+        doc_months[t] += max(months, float(min_months[t]))
 
     for i in range(n):
         if floor < len(mig_ats) and i >= mig_ats[floor]:
@@ -113,6 +150,8 @@ def simulate(scores: np.ndarray, k: int, policy: Policy,
                     migrated_per_boundary[dst - 1] += 1
                     mig_reads[src] += 1
                     mig_writes[dst] += 1
+                    occupancy[src] -= 1
+                    occupancy[dst] += 1
             floor = dst
         entry = (scores[i], -i)
         if len(heap) < k:
@@ -121,6 +160,7 @@ def simulate(scores: np.ndarray, k: int, policy: Policy,
             weakest_score, neg_idx = heapq.heappop(heap)
             evict_doc = -neg_idx
             _charge_rental(evict_doc, i)
+            occupancy[tier_of_doc[evict_doc]] -= 1
             del tier_of_doc[evict_doc]
             del write_index[evict_doc]
             evictions += 1
@@ -133,8 +173,11 @@ def simulate(scores: np.ndarray, k: int, policy: Policy,
             tier_of_doc[i] = t
             write_index[i] = i
             writes[t] += 1
+            occupancy[t] += 1
             wrote_so_far += 1
         cum_writes[i] = wrote_so_far
+        # occupancy high-water mark, sampled at the end of each doc step
+        np.maximum(occupancy_hwm, occupancy, out=occupancy_hwm)
 
     survivors = np.array(sorted(-neg for _, neg in heap), dtype=np.int64)
     for doc in tier_of_doc:
@@ -146,9 +189,14 @@ def simulate(scores: np.ndarray, k: int, policy: Policy,
                     migrated=int(migrated_per_boundary.sum()),
                     evictions=evictions, cum_writes=cum_writes,
                     doc_months_per_tier=doc_months, survivor_ids=survivors,
-                    migrated_per_boundary=migrated_per_boundary)
+                    migrated_per_boundary=migrated_per_boundary,
+                    occupancy_hwm_per_tier=occupancy_hwm)
 
     if nt is not None:
+        # the guard above forces t_tiers == nt.t whenever nt is given
+        if reads.sum() > 0:
+            res.read_latency_mean = (float(reads @ nt.read_latency)
+                                     / float(reads.sum()))
         res.cost_writes = float(writes @ nt.cw)
         res.cost_reads = float(reads @ nt.cr) * wl.reads_per_window
         res.cost_migration = float(mig_reads @ nt.cr + mig_writes @ nt.cw)

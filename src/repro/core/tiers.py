@@ -20,7 +20,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .placement import Policy, TIER_A, TIER_B
+from .compat import TIER_A, TIER_B  # noqa: F401  (canonical home: compat)
+from .placement import Policy
 
 
 @dataclass

@@ -37,11 +37,20 @@ if TYPE_CHECKING:  # avoid a runtime cycle: costs.py owns NTierCostModel
 @dataclass(frozen=True)
 class TierSpec:
     """One tier of the hierarchy: raw billing plus its transfer rates on
-    the write path (producer → tier) and the read path (tier → consumer)."""
+    the write path (producer → tier) and the read path (tier → consumer).
+
+    ``capacity_docs`` declares a per-tier occupancy bound (documents the
+    tier can hold at any instant, None = unbounded) that the constrained
+    planner picks up by default (``core.constraints``); ``read_latency_s``
+    is the tier's expected per-object retrieval latency, consumed by
+    ``ReadLatencySLO`` constraints and by reconciliation-time SLO checks.
+    """
 
     costs: "TierCosts"
     xfer_in_per_gb: float = 0.0
     xfer_out_per_gb: float = 0.0
+    capacity_docs: float | None = None
+    read_latency_s: float = 0.0
 
     @property
     def name(self) -> str:
@@ -98,9 +107,11 @@ def aws_s3_tiering(glacier_retrieval_per_gb: float = 0.03,
     gir = TierCosts("s3-glacier-ir", put_per_doc=0.02 / 1000,
                     get_per_doc=0.01 / 1000, storage_per_gb_month=0.004)
     return TierTopology(tiers=(
-        TierSpec(std),
-        TierSpec(ia, xfer_out_per_gb=ia_retrieval_per_gb),
-        TierSpec(gir, xfer_out_per_gb=glacier_retrieval_per_gb),
+        TierSpec(std, read_latency_s=0.02),
+        TierSpec(ia, xfer_out_per_gb=ia_retrieval_per_gb,
+                 read_latency_s=0.03),
+        TierSpec(gir, xfer_out_per_gb=glacier_retrieval_per_gb,
+                 read_latency_s=0.08),
     ), name="aws-s3-tiering")
 
 
@@ -119,10 +130,33 @@ def aws_efs_s3_glacier(glacier_retrieval_per_gb: float = 0.03) -> TierTopology:
     gir = TierCosts("s3-glacier-ir", put_per_doc=0.02 / 1000,
                     get_per_doc=0.01 / 1000, storage_per_gb_month=0.004)
     return TierTopology(tiers=(
-        TierSpec(efs),
-        TierSpec(s3),
-        TierSpec(gir, xfer_out_per_gb=glacier_retrieval_per_gb),
+        TierSpec(efs, read_latency_s=0.003),
+        TierSpec(s3, read_latency_s=0.02),
+        TierSpec(gir, xfer_out_per_gb=glacier_retrieval_per_gb,
+                 read_latency_s=0.08),
     ), name="aws-efs-s3-glacier")
+
+
+def aws_archive_tiering(flexible_retrieval_per_gb: float = 0.01,
+                        flexible_latency_s: float = 4.0 * 3600,
+                        min_storage: bool = False) -> TierTopology:
+    """S3 Standard → Glacier Flexible Retrieval (us-east-1 list prices):
+    the archive tier rents ~6x cheaper than Standard but serves standard
+    retrievals in hours, not milliseconds — the hierarchy where a
+    read-path SLO (``constraints.ReadLatencySLO``) genuinely bites and
+    forces the planner off the cheapest tier. ``min_storage=True`` adds
+    Glacier's 90-day minimum-storage-duration billing."""
+    from .costs import TierCosts
+    std = TierCosts("s3-standard", put_per_doc=0.005 / 1000,
+                    get_per_doc=0.0004 / 1000, storage_per_gb_month=0.023)
+    gfr = TierCosts("s3-glacier-flexible", put_per_doc=0.03 / 1000,
+                    get_per_doc=0.0004 / 1000, storage_per_gb_month=0.0036,
+                    min_storage_days=90.0 if min_storage else 0.0)
+    return TierTopology(tiers=(
+        TierSpec(std, read_latency_s=0.02),
+        TierSpec(gfr, xfer_out_per_gb=flexible_retrieval_per_gb,
+                 read_latency_s=flexible_latency_s),
+    ), name="aws-archive-tiering")
 
 
 def hbm_dram_disk_preset(n_docs: int, k: int, doc_gb: float,
@@ -130,12 +164,16 @@ def hbm_dram_disk_preset(n_docs: int, k: int, doc_gb: float,
                          hbm_bw_gbps: float = 819.0,
                          host_link_gbps: float = 32.0,
                          disk_bw_gbps: float = 2.0,
-                         hbm_capacity_premium: float = 50.0
+                         hbm_capacity_premium: float = 50.0,
+                         hbm_capacity_docs: float | None = None
                          ) -> "NTierCostModel":
     """Hardware-derived 3-tier hierarchy: device HBM → host DRAM → local
     disk/object store, extending ``costs.hbm_host_preset`` one level down.
     "Cost" is seconds of bandwidth occupancy plus a capacity-opportunity
-    rental premium that falls two orders of magnitude per level."""
+    rental premium that falls two orders of magnitude per level.
+    ``hbm_capacity_docs`` declares the device slab's hard slot budget
+    (HBM is the one tier that physically cannot oversubscribe); the
+    constrained planner then keeps the hot boundary under it."""
     from .costs import DAYS_PER_MONTH, NTierCostModel, TierCosts, WorkloadSpec
     months = window_seconds / (DAYS_PER_MONTH * 24 * 3600)
     hbm = TierCosts("device-hbm", put_per_doc=doc_gb / hbm_bw_gbps,
@@ -147,7 +185,11 @@ def hbm_dram_disk_preset(n_docs: int, k: int, doc_gb: float,
     disk = TierCosts("local-disk", put_per_doc=doc_gb / disk_bw_gbps,
                      get_per_doc=doc_gb / disk_bw_gbps,
                      storage_per_gb_month=hbm_capacity_premium / 10_000.0)
-    topo = TierTopology(tiers=(TierSpec(hbm), TierSpec(dram), TierSpec(disk)),
-                        name="hbm-dram-disk")
+    topo = TierTopology(tiers=(
+        TierSpec(hbm, capacity_docs=hbm_capacity_docs,
+                 read_latency_s=doc_gb / hbm_bw_gbps),
+        TierSpec(dram, read_latency_s=doc_gb / host_link_gbps),
+        TierSpec(disk, read_latency_s=doc_gb / disk_bw_gbps),
+    ), name="hbm-dram-disk")
     wl = WorkloadSpec(n_docs=n_docs, k=k, doc_gb=doc_gb, window_months=months)
     return NTierCostModel(topology=topo, workload=wl)

@@ -3,9 +3,11 @@
 # freely), advanced inside one jitted step.
 #   engine   — batched ReservoirState (leading stream axis) + StreamEngine
 #   planner  — vectorized closed-form shp.plan_placement over the fleet
-#              (+ plan_fleet_mixed for heterogeneous tier depths)
+#              (+ plan_fleet_mixed for heterogeneous tier depths and
+#              constraint-aware planning with shared-capacity water-filling)
 #   router   — mixed-batch → per-K bucket scatter (pads/buckets by K)
 #   metering — per-stream ledgers reconciled against the analytic write law
+#              (+ occupancy high-water marks and SLO checks)
 from . import engine, metering, planner, router  # noqa: F401
 from .engine import BatchedReservoirState, StreamEngine, StreamSpec  # noqa: F401
-from .planner import FleetPlan, MixedFleetPlan, plan_fleet, plan_fleet_mixed  # noqa: F401
+from .planner import FleetPlan, MixedFleetPlan, plan_fleet, plan_fleet_mixed, waterfill  # noqa: F401

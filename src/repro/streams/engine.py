@@ -199,7 +199,8 @@ class StreamEngine:
     """
 
     def __init__(self, specs: Sequence[StreamSpec], *,
-                 use_kernel_filter: bool = False, block_n: int = 512):
+                 use_kernel_filter: bool = False, block_n: int = 512,
+                 constraints=None):
         if not specs:
             raise ValueError("need at least one stream")
         by_id = {s.stream_id: s for s in specs}
@@ -208,13 +209,21 @@ class StreamEngine:
         self.buckets = router.bucket_streams(
             {s.stream_id: s.k for s in specs})
         self.router = router.StreamRouter(self.buckets)
+        self.constraints = constraints
         # fleet plan for streams that carry a cost model (2- and N-tier mix)
         planned = [s for s in specs if s.explicit_boundaries() is None]
         if planned:
             if any(s.cost_model is None for s in planned):
                 raise ValueError(
                     "each stream needs r, boundaries, or a cost_model")
-            plan = planner.plan_fleet_mixed([s.cost_model for s in planned])
+            plan = planner.plan_fleet_mixed([s.cost_model for s in planned],
+                                            constraints=constraints)
+            bad = [s.stream_id for i, s in enumerate(planned)
+                   if not plan.feasible(i)]
+            if bad:
+                raise ValueError(
+                    f"streams {bad} have no feasible plan under the given "
+                    "constraints — relax capacities/SLO or drop the streams")
             b_of = {s.stream_id: plan.boundaries[i]
                     for i, s in enumerate(planned)}
             mig_of = {s.stream_id: plan.migrate(i)
@@ -228,12 +237,15 @@ class StreamEngine:
         ks, bounds, migs = [], [], []
         offset = 0
         self._row_of: Dict[int, int] = {}
+        self._model_of_row: Dict[int, object] = {}
         for b in self.buckets:
             rows = np.arange(offset, offset + b.m, dtype=np.int64)
             self._global_rows.append(rows)
             for j, sid in enumerate(b.stream_ids):
                 self._row_of[sid] = offset + j
                 spec = by_id[sid]
+                if spec.cost_model is not None:
+                    self._model_of_row[offset + j] = spec.cost_model
                 ks.append(spec.k)
                 explicit = spec.explicit_boundaries()
                 if explicit is not None:
@@ -303,3 +315,44 @@ class StreamEngine:
             self.meter.record_reads(self._global_rows[bi],
                                     np.asarray(self._states[bi].ids))
         return self.survivors()
+
+    def check_constraints(self, constraints=None, latencies=None,
+                          doc_gb=None) -> Dict:
+        """Reconciliation-time violation report against the engine's (or
+        an explicit) ``ConstraintSet``: metered occupancy high-water marks
+        vs capacities, realized read latency vs the SLO (see
+        ``FleetMeter.check_constraints``). Streams planned from cost
+        models are checked against the ``effective_capacity`` merge, so
+        topology-declared ``TierSpec.capacity_docs`` are enforced at
+        reconciliation exactly as at planning time."""
+        from repro.core.constraints import effective_capacity
+        cset = constraints if constraints is not None else self.constraints
+        if cset is None:
+            raise ValueError("no ConstraintSet given or configured")
+        per_stream_caps = None
+        if self._model_of_row:
+            nt_meter = self.meter.n_tiers
+            has_bytes = any(c.max_bytes is not None for c in cset.capacities)
+            per_stream_caps = np.empty((self.m, nt_meter))
+            sizes = (np.broadcast_to(np.asarray(doc_gb, np.float64),
+                                     (self.m,))
+                     if doc_gb is not None else None)
+            for row in range(self.m):
+                cm = self._model_of_row.get(row)
+                if cm is not None:
+                    nt = (cm.as_ntier()
+                          if isinstance(cm, TwoTierCostModel) else cm)
+                    cap = np.full(nt_meter, np.inf)
+                    cap[:min(nt.t, nt_meter)] = \
+                        effective_capacity(cset, nt)[:nt_meter]
+                else:
+                    if has_bytes and sizes is None:
+                        raise ValueError(
+                            "byte-denominated capacities need doc_gb for "
+                            "streams without a cost model")
+                    g = float(sizes[row]) if sizes is not None else 0.0
+                    cap = cset.capacity_array(nt_meter, g)
+                per_stream_caps[row] = cap
+        return self.meter.check_constraints(cset, latencies=latencies,
+                                            doc_gb=doc_gb,
+                                            per_stream_caps=per_stream_caps)

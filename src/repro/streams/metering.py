@@ -16,10 +16,18 @@ from typing import Dict, Sequence
 
 import numpy as np
 
-from repro.core import shp
+from repro.core import compat, shp
 from repro.core.tiers import Ledger
 
-TIER_A, TIER_B = 0, 1
+
+def __getattr__(name: str):
+    # the two-tier constants now live in core.compat — keep the legacy
+    # module attributes importable through the single deprecation pathway
+    if name in ("TIER_A", "TIER_B"):
+        compat.deprecated(f"streams.metering.{name}",
+                          f"repro.core.compat.{name}")
+        return getattr(compat, name)
+    raise AttributeError(name)
 
 
 def _pad_boundaries(boundaries: Sequence[Sequence[float]]) -> np.ndarray:
@@ -56,7 +64,7 @@ class FleetMeter:
         if boundaries is None:
             if rs is None:
                 raise ValueError("need rs or boundaries")
-            boundaries = [(float(r),) for r in rs]
+            boundaries = [compat.boundaries_from_r(r) for r in rs]
         self.boundaries = _pad_boundaries(boundaries)
         assert self.boundaries.shape[0] == m
         self.n_tiers = self.boundaries.shape[1] + 1
@@ -68,6 +76,10 @@ class FleetMeter:
         self.reads = np.zeros((m, self.n_tiers), np.int64)
         self.deletes = np.zeros((m, self.n_tiers), np.int64)
         self.migrations = np.zeros(m, np.int64)
+        # current residents per tier and the running high-water mark,
+        # sampled after each recorded step (exact vs the simulator at W=1)
+        self.occupancy = np.zeros((m, self.n_tiers), np.int64)
+        self.occupancy_hwm = np.zeros((m, self.n_tiers), np.int64)
 
     @property
     def m(self) -> int:
@@ -120,17 +132,22 @@ class FleetMeter:
         np.add.at(self.observed, stream_rows, (doc_ids >= 0).sum(1))
         # writes: doc index == arrival position, so the static tier is the
         # write destination with or without a later cascade
-        self._scatter(self.writes, stream_rows,
-                      self._static_tier(stream_rows, doc_ids),
-                      wrote & (doc_ids >= 0))
+        write_tiers = self._static_tier(stream_rows, doc_ids)
+        write_mask = wrote & (doc_ids >= 0)
+        self._scatter(self.writes, stream_rows, write_tiers, write_mask)
+        self._scatter(self.occupancy, stream_rows, write_tiers, write_mask)
         if evicted_ids is not None:
             evicted_ids = np.asarray(evicted_ids)
             # after a cascade nothing lives below the floor anymore
-            self._scatter(self.deletes, stream_rows,
-                          self._effective_tier(stream_rows, evicted_ids),
-                          evicted_ids >= 0)
+            ev_tiers = self._effective_tier(stream_rows, evicted_ids)
+            ev_mask = evicted_ids >= 0
+            self._scatter(self.deletes, stream_rows, ev_tiers, ev_mask)
+            rows2 = np.broadcast_to(stream_rows[:, None], ev_tiers.shape)
+            np.add.at(self.occupancy, (rows2[ev_mask], ev_tiers[ev_mask]), -1)
         if state_ids is not None:
             self._maybe_migrate(stream_rows, np.asarray(state_ids))
+        self.occupancy_hwm[stream_rows] = np.maximum(
+            self.occupancy_hwm[stream_rows], self.occupancy[stream_rows])
 
     def _maybe_migrate(self, stream_rows, state_ids) -> None:
         """Fire every boundary whose position the stream just crossed at
@@ -152,6 +169,14 @@ class FleetMeter:
             self.floor[rows][:, None])
         resident = (ids >= 0) & (tiers < target[firing][:, None])
         np.add.at(self.migrations, rows, resident.sum(1))
+        # occupancy: every resident below the target hops into it
+        occ = self.occupancy[rows]
+        tgt = target[firing]
+        below = np.arange(self.n_tiers)[None, :] < tgt[:, None]
+        moved = np.where(below, occ, 0).sum(1)
+        occ = np.where(below, 0, occ)
+        occ[np.arange(rows.shape[0]), tgt] += moved
+        self.occupancy[rows] = occ
         self.floor[rows] = target[firing]
 
     def record_reads(self, stream_rows, doc_ids) -> None:
@@ -193,6 +218,81 @@ class FleetMeter:
             "mean_rel_err": float(np.mean(rel)),
             "fleet_actual": float(actual.sum()),
             "fleet_expected": float(expected.sum()),
+        }
+
+    def read_latency(self, latencies) -> np.ndarray:
+        """(M,) realized mean per-survivor read latency: ``latencies`` is
+        (T,) or (M, T) per-tier seconds. Streams with no recorded reads
+        report 0."""
+        lat = np.broadcast_to(np.asarray(latencies, np.float64),
+                              (self.m, self.n_tiers))
+        total = (self.reads * lat).sum(1)
+        count = self.reads.sum(1)
+        return np.where(count > 0, total / np.maximum(count, 1), 0.0)
+
+    def check_constraints(self, constraint_set, latencies=None,
+                          doc_gb=None, per_stream_caps=None) -> Dict:
+        """Reconciliation-time violation report: compare the *metered*
+        occupancy high-water marks (and realized read latency, when
+        ``latencies`` is given) against a ``core.constraints``
+        ``ConstraintSet``. Shared capacities are checked fleet-wide
+        (summed over streams); per-stream capacities per stream.
+        Byte-denominated capacities need ``doc_gb`` (scalar or (M,)
+        per-stream document sizes) to convert — the meter counts
+        documents, not bytes. ``per_stream_caps`` ((M, T)) overrides the
+        per-stream capacity computation entirely — the engine passes the
+        ``effective_capacity`` merge of topology-declared and explicit
+        capacities, which the model-less meter cannot derive itself.
+        """
+        has_bytes = any(
+            c.max_bytes is not None
+            for c in (constraint_set.capacities
+                      + constraint_set.shared_capacities))
+        if has_bytes and doc_gb is None and per_stream_caps is None:
+            raise ValueError("byte-denominated capacities need doc_gb to "
+                             "convert metered document counts")
+        if (doc_gb is None
+                and any(c.max_bytes is not None
+                        for c in constraint_set.shared_capacities)):
+            raise ValueError("shared byte budgets need doc_gb to convert "
+                             "metered document counts")
+        sizes = (np.broadcast_to(np.asarray(doc_gb, np.float64), (self.m,))
+                 if doc_gb is not None else None)
+        if per_stream_caps is not None:
+            cap = np.asarray(per_stream_caps, np.float64)
+        elif sizes is None:
+            cap = np.broadcast_to(
+                constraint_set.capacity_array(self.n_tiers, 0.0),
+                (self.m, self.n_tiers))
+        else:
+            cap = np.stack([constraint_set.capacity_array(self.n_tiers,
+                                                          float(g))
+                            for g in sizes])
+        capacity_violations = self.occupancy_hwm > cap
+        shared_violations: Dict = {}
+        for c in constraint_set.shared_capacities:
+            if c.tier >= self.n_tiers:
+                continue
+            occ = self.occupancy_hwm[:, c.tier]
+            excess = {}
+            if occ.sum() > c.max_docs:
+                excess["excess_docs"] = float(occ.sum() - c.max_docs)
+            if c.max_bytes is not None:
+                used = float((occ * sizes).sum()) * 1e9
+                if used > c.max_bytes:
+                    excess["excess_bytes"] = used - c.max_bytes
+            if excess:
+                shared_violations[c.tier] = excess
+        slo = constraint_set.max_read_latency
+        slo_violations = np.zeros(self.m, bool)
+        if latencies is not None and np.isfinite(slo):
+            slo_violations = self.read_latency(latencies) > slo
+        return {
+            "capacity_violations": capacity_violations,
+            "shared_violations": shared_violations,
+            "slo_violations": slo_violations,
+            "ok": not (capacity_violations.any() or shared_violations
+                       or slo_violations.any()),
         }
 
     # ---- classic per-stream view ---------------------------------------

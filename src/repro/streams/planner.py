@@ -14,15 +14,24 @@ Fleets may mix tier depths: ``plan_fleet_mixed`` routes each stream's cost
 model to the matching vectorized solver (this legacy two-tier pass, or the
 multi-threshold ``shp.plan_ntier_arrays`` grouped by tier count) and
 returns one uniform per-stream boundary-vector plan.
+
+Constraints (``core.constraints``) thread through both entry points as
+vectorized feasibility masks over the (M, T) boundary batch. Fleet-shared
+capacities (``TierCapacity(shared=True)``) are split across tenants by a
+water-filling pass (:func:`waterfill`): plan unconstrained, measure each
+stream's desired occupancy high-water mark on the shared tier, cap the
+binding streams at the common water level λ with Σ min(desired, λ) = C,
+and re-plan only those — the fleet then never oversubscribes C.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core import shp
+from repro.core import constraints as constraints_mod, shp
+from repro.core.constraints import ConstraintSet, TierCapacity
 from repro.core.costs import NTierCostModel, TwoTierCostModel
 from repro.core.placement import Policy
 
@@ -66,7 +75,14 @@ class FleetCosts:
 
 @dataclass(frozen=True)
 class FleetPlan:
-    """Per-stream outcome of the vectorized decision procedure."""
+    """Per-stream outcome of the vectorized decision procedure.
+
+    Under constraints the family candidates are planned by the
+    constrained N-tier pass: ``r_no_migration``/``r_migration`` then hold
+    the *feasibility-clamped* chosen boundary (not the raw eq. 17/21
+    stationary points), unchosen family columns of ``totals`` are +inf,
+    and ``feasible`` flags streams with any feasible plan at all.
+    """
 
     strategy_idx: np.ndarray  # (M,) int — index into STRATEGIES
     r: np.ndarray  # (M,) absolute changeover index of the chosen strategy
@@ -74,6 +90,7 @@ class FleetPlan:
     r_no_migration: np.ndarray  # (M,) eq. 17 stationary point (may be inf/nan)
     r_migration: np.ndarray  # (M,) eq. 21 stationary point
     n_docs: np.ndarray  # (M,)
+    feasible: Optional[np.ndarray] = None  # (M,) bool (None = unconstrained)
 
     @property
     def m(self) -> int:
@@ -113,15 +130,34 @@ def _safe_div(num: np.ndarray, den: np.ndarray) -> np.ndarray:
     return np.where(den == 0.0, np.nan, out)
 
 
-def plan_fleet(models_or_costs) -> FleetPlan:
+def plan_fleet(models_or_costs, constraints: Optional[ConstraintSet] = None,
+               lat: Optional[np.ndarray] = None) -> FleetPlan:
     """Plan every stream in the fleet in one vectorized pass.
 
     Accepts a sequence of ``TwoTierCostModel`` or a prebuilt ``FleetCosts``.
     Uses the paper's approximate (logarithmic) forms, i.e. matches
     ``shp.plan_placement(cm, exact=False)`` per stream.
+
+    A non-empty ``constraints`` routes the fleet through the constrained
+    N-tier array pass (the resource-augmented solver with vectorized
+    feasibility masks over the (M, 2) boundary batch). ``lat`` supplies
+    per-tier read latencies ((2,) or (M, 2)) for ``ReadLatencySLO``
+    constraints — the legacy two-tier cost models carry none. Byte-
+    denominated capacities need document sizes: plan those fleets via
+    ``plan_fleet_mixed`` with full cost models.
     """
     fc = (models_or_costs if isinstance(models_or_costs, FleetCosts)
           else FleetCosts.from_models(models_or_costs))
+    if constraints is not None and not constraints.empty:
+        if constraints.shared_capacities:
+            raise ValueError(
+                "fleet-shared capacities need the water-filling pass — "
+                "plan via plan_fleet_mixed")
+        if any(c.max_bytes is not None for c in constraints.capacities):
+            raise ValueError(
+                "byte-denominated capacities need document sizes — plan "
+                "via plan_fleet_mixed with full cost models")
+        return _plan_fleet_constrained(fc, constraints, lat)
     n, k, rpw = fc.n, fc.k, fc.reads_per_window
     log_n_over_k = np.log(n / k)
 
@@ -160,6 +196,60 @@ def plan_fleet(models_or_costs) -> FleetPlan:
                      r_no_migration=r_nm, r_migration=r_mg, n_docs=n)
 
 
+def _plan_fleet_constrained(fc: FleetCosts, cset: ConstraintSet,
+                            lat: Optional[np.ndarray]) -> FleetPlan:
+    """The constrained two-tier fleet pass: stack the struct-of-arrays
+    view into (M, 2) tier columns and run the constrained N-tier solver,
+    mapping its boundary-vector plans back onto the four legacy candidate
+    strategies."""
+    m = fc.m
+    cw = np.stack([fc.cw_a, fc.cw_b], axis=1)
+    cr = np.stack([fc.cr_a, fc.cr_b], axis=1)
+    cs = np.stack([fc.cs_a, fc.cs_b], axis=1)
+    cap = np.broadcast_to(cset.capacity_array(2, 0.0), (m, 2))
+    lat_arr = (np.zeros((m, 2)) if lat is None
+               else np.broadcast_to(np.asarray(lat, np.float64), (m, 2)))
+    slo = np.full(m, cset.max_read_latency)
+    out = shp.plan_ntier_arrays(cw, cr, cs, fc.n, fc.k, fc.reads_per_window,
+                                cap=cap, lat=lat_arr, slo=slo)
+    feasible = np.isfinite(out["total"])
+    r = out["bounds"][:, 0]
+    mig = out["migrate"]
+    # map the boundary plan onto the legacy candidate columns
+    single_a = ~mig & (r >= fc.n)
+    single_b = ~mig & (r <= 0.0)
+    idx = np.select([single_a, single_b, ~mig], [0, 1, 2], 3)
+    idx = np.where(feasible, idx, 0)
+    totals = np.full((m, 4), np.inf)
+    totals[np.arange(m), idx] = np.where(feasible, out["total"], np.inf)
+    return FleetPlan(strategy_idx=idx, r=r, totals=totals,
+                     r_no_migration=np.where(mig, np.nan, r),
+                     r_migration=np.where(mig, r, np.nan), n_docs=fc.n,
+                     feasible=feasible)
+
+
+# ---------------------------------------------------------------------------
+# Fleet-shared capacity: the water-filling split
+# ---------------------------------------------------------------------------
+
+def waterfill(desired: np.ndarray, budget: float) -> np.ndarray:
+    """Split a shared budget across tenants: each stream gets
+    ``min(desired_i, λ)`` with the water level λ chosen so the grants sum
+    to the budget (all ``desired`` granted when they already fit).
+    Returns the (M,) per-stream caps."""
+    d = np.asarray(desired, np.float64)
+    if d.sum() <= budget:
+        return d.copy()
+    order = np.sort(d)
+    m = order.shape[0]
+    prefix = np.concatenate([[0.0], np.cumsum(order)])
+    # smallest j where filling everyone above order[j] to order[j] overflows
+    fill_at = prefix[:-1] + order * (m - np.arange(m))
+    j = int(np.searchsorted(fill_at, budget, side="right"))
+    lam = (budget - prefix[j]) / max(m - j, 1)
+    return np.minimum(d, max(lam, 0.0))
+
+
 # ---------------------------------------------------------------------------
 # Mixed-depth fleets: two-tier and N-tier cost models side by side
 # ---------------------------------------------------------------------------
@@ -170,7 +260,10 @@ class MixedFleetPlan:
 
     Two-tier streams are planned by the legacy ``plan_fleet`` pass (their
     single boundary is the chosen r); N-tier streams by the vectorized
-    multi-threshold solver, grouped by tier count.
+    multi-threshold solver, grouped by tier count. Constrained fleets
+    route every stream (two-tier included, via ``as_ntier``) through the
+    constrained N-tier pass; streams with no feasible plan carry
+    strategy ``"infeasible"`` and ``totals = +inf``.
     """
 
     boundaries: Tuple[Tuple[float, ...], ...]
@@ -188,7 +281,13 @@ class MixedFleetPlan:
     def migrate(self, i: int) -> bool:
         return bool(self.migrate_flags[i])
 
+    def feasible(self, i: int) -> bool:
+        return bool(np.isfinite(self.totals[i]))
+
     def policy(self, i: int) -> Policy:
+        if not self.feasible(i):
+            raise ValueError(f"stream {i} has no feasible plan under its "
+                             "constraints")
         return Policy(boundaries=self.boundaries[i],
                       migrate_at_r=self.migrate(i), name=self.strategies[i])
 
@@ -199,38 +298,136 @@ class MixedFleetPlan:
         return out
 
 
-def plan_fleet_mixed(models: Sequence[TwoTierCostModel | NTierCostModel]
-                     ) -> MixedFleetPlan:
-    """Plan a heterogeneous fleet in a handful of vectorized passes: one
-    legacy two-tier pass plus one N-tier pass per distinct tier count."""
-    m = len(models)
-    boundaries: List[Tuple[float, ...]] = [()] * m
-    migrate = np.zeros(m, bool)
-    strategies: List[str] = [""] * m
-    totals = np.zeros(m, np.float64)
-    two_idx = [i for i, cm in enumerate(models)
-               if isinstance(cm, TwoTierCostModel)]
-    if two_idx:
-        plan = plan_fleet([models[i] for i in two_idx])
-        for j, i in enumerate(two_idx):
-            boundaries[i] = (float(plan.r[j]),)
-            migrate[i] = plan.migrate(j)
-            strategies[i] = plan.strategy(j)
-            totals[i] = plan.best_total[j]
-    by_t: dict = {}
+def _as_ntier_models(models) -> List[NTierCostModel]:
+    out = []
     for i, cm in enumerate(models):
-        if isinstance(cm, NTierCostModel):
-            by_t.setdefault(cm.t, []).append(i)
-        elif not isinstance(cm, TwoTierCostModel):
+        if isinstance(cm, TwoTierCostModel):
+            out.append(cm.as_ntier())
+        elif isinstance(cm, NTierCostModel):
+            out.append(cm)
+        else:
             raise TypeError(f"stream {i}: unsupported cost model {type(cm)}")
+    return out
+
+
+def _plan_mixed_ntier(nt_models, csets, boundaries, migrate,
+                      strategies, totals, only=None) -> None:
+    """One N-tier pass per distinct tier count (constrained when the
+    per-stream sets say so), writing the per-stream results in place.
+    ``only`` restricts to a subset of stream indices (the unconstrained
+    route's N-tier leg, and the water-filling re-plan)."""
+    by_t: dict = {}
+    idx_iter = range(len(nt_models)) if only is None else only
+    for i in idx_iter:
+        by_t.setdefault(nt_models[i].t, []).append(i)
     for t, idxs in sorted(by_t.items()):
         tot, bounds, mig, strats = shp.plan_ntier_batch(
-            [models[i] for i in idxs])
+            [nt_models[i] for i in idxs],
+            constraints=[csets[i] for i in idxs])
         for j, i in enumerate(idxs):
             boundaries[i] = tuple(float(b) for b in bounds[j])
             migrate[i] = bool(mig[j])
             strategies[i] = strats[j]
             totals[i] = tot[j]
+
+
+def plan_fleet_mixed(models: Sequence[TwoTierCostModel | NTierCostModel],
+                     constraints=None) -> MixedFleetPlan:
+    """Plan a heterogeneous fleet in a handful of vectorized passes: one
+    legacy two-tier pass plus one N-tier pass per distinct tier count.
+
+    ``constraints`` is a fleet-wide ``ConstraintSet`` or one per stream.
+    Fleet-wide shared capacities (``TierCapacity(shared=True)``) are split
+    across tenants by water-filling: plan with the per-stream constraints,
+    measure each stream's expected occupancy high-water mark on the shared
+    tier, grant ``min(desired, λ)`` with Σ grants = C, and re-plan only
+    the binding streams under their grant — the fleet's total expected
+    occupancy then never exceeds C (asserted by the property tests).
+    """
+    m = len(models)
+    boundaries: List[Tuple[float, ...]] = [()] * m
+    migrate = np.zeros(m, bool)
+    strategies: List[str] = [""] * m
+    totals = np.zeros(m, np.float64)
+    shared: Tuple[TierCapacity, ...] = ()
+    if constraints is None:
+        per_stream = None
+    elif isinstance(constraints, ConstraintSet):
+        shared = constraints.shared_capacities
+        base = ConstraintSet(*(c for c in constraints if c not in shared))
+        per_stream = None if (base.empty and not shared) else [base] * m
+    else:
+        if len(constraints) != m:
+            raise ValueError("need one ConstraintSet per stream")
+        per_stream = [c if c is not None else ConstraintSet()
+                      for c in constraints]
+        if any(c.shared_capacities for c in per_stream):
+            raise ValueError(
+                "shared capacities are fleet-wide — pass one ConstraintSet "
+                "for the whole fleet, not per-stream sets")
+
+    if per_stream is None:
+        # unconstrained: the original two-pass route (bit-stable)
+        two_idx = [i for i, cm in enumerate(models)
+                   if isinstance(cm, TwoTierCostModel)]
+        if two_idx:
+            plan = plan_fleet([models[i] for i in two_idx])
+            for j, i in enumerate(two_idx):
+                boundaries[i] = (float(plan.r[j]),)
+                migrate[i] = plan.migrate(j)
+                strategies[i] = plan.strategy(j)
+                totals[i] = plan.best_total[j]
+        ntier_idx = []
+        for i, cm in enumerate(models):
+            if isinstance(cm, NTierCostModel):
+                ntier_idx.append(i)
+            elif not isinstance(cm, TwoTierCostModel):
+                raise TypeError(
+                    f"stream {i}: unsupported cost model {type(cm)}")
+        _plan_mixed_ntier(models, [None] * m, boundaries, migrate,
+                          strategies, totals, only=ntier_idx)
+        return MixedFleetPlan(boundaries=tuple(boundaries),
+                              migrate_flags=migrate,
+                              strategies=tuple(strategies), totals=totals)
+
+    nt_models = _as_ntier_models(models)
+    csets = list(per_stream)
+    _plan_mixed_ntier(nt_models, csets, boundaries, migrate,
+                      strategies, totals)
+    done_tiers: List[int] = []
+    for cap_c in sorted(shared, key=lambda c: c.tier):
+        if cap_c.max_bytes is not None:
+            raise NotImplementedError(
+                "shared capacities are document-denominated; convert byte "
+                "budgets per tenant before planning")
+
+        def occupancy_on(tier: int) -> np.ndarray:
+            occ = np.zeros(m)
+            for i, nt in enumerate(nt_models):
+                if tier < nt.t and np.isfinite(totals[i]):
+                    occ[i] = constraints_mod.peak_occupancy(
+                        boundaries[i], nt.workload.n_docs, nt.workload.k,
+                        migrate[i])[tier]
+            return occ
+
+        desired = occupancy_on(cap_c.tier)
+        if desired.sum() <= cap_c.max_docs:
+            done_tiers.append(cap_c.tier)
+            continue
+        grants = waterfill(desired, cap_c.max_docs)
+        binding = np.flatnonzero(desired > grants * (1 + 1e-12))
+        # freeze the re-planned streams' usage of every already-balanced
+        # shared tier at its current level, so re-planning for this tier
+        # cannot push an earlier tier back over its budget
+        frozen = {t: occupancy_on(t) for t in done_tiers}
+        for i in binding:
+            extra = [TierCapacity(cap_c.tier, float(grants[i]))]
+            extra += [TierCapacity(t, float(frozen[t][i]))
+                      for t in done_tiers]
+            csets[i] = ConstraintSet(*csets[i], *extra)
+        _plan_mixed_ntier(nt_models, csets, boundaries, migrate,
+                          strategies, totals, only=list(binding))
+        done_tiers.append(cap_c.tier)
     return MixedFleetPlan(boundaries=tuple(boundaries),
                           migrate_flags=migrate,
                           strategies=tuple(strategies), totals=totals)

@@ -1,0 +1,659 @@
+"""Constraint-aware planning stack (core/constraints.py + the constrained
+solver in core/shp.py + fleet threading): bit-exact degradation to the
+unconstrained closed form, brute-force feasible-grid agreement on random
+constrained 3/4-tier models, capacity clamping / SLO semantics, fleet-shared
+capacity water-filling, occupancy metering, and minimum-storage-duration
+billing."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import costs, placement, shp, simulator, topology
+from repro.core.constraints import (ConstraintSet, ReadLatencySLO,
+                                    TierCapacity, expected_read_latency,
+                                    peak_occupancy)
+from repro.streams import StreamEngine, StreamSpec, planner, waterfill
+
+
+def random_ntier_model(rng, t, with_latency=True):
+    n = int(rng.integers(2_000, 200_000))
+    k = int(rng.integers(1, max(2, n // 10)))
+    specs = tuple(
+        topology.TierSpec(
+            costs.TierCosts(f"t{i}", *(10.0 ** rng.uniform(-8, -3, 3))),
+            xfer_in_per_gb=float(10.0 ** rng.uniform(-7, -3)),
+            xfer_out_per_gb=float(10.0 ** rng.uniform(-6, -2)),
+            read_latency_s=(float(10.0 ** rng.uniform(-3, 2))
+                            if with_latency else 0.0))
+        for i in range(t))
+    wl = costs.WorkloadSpec(n_docs=n, k=k,
+                            doc_gb=float(rng.uniform(1e-4, 1.0)),
+                            window_months=float(rng.uniform(0.03, 3.0)))
+    return topology.TierTopology(tiers=specs).cost_model(wl)
+
+
+def random_constraints(rng, cm):
+    t, k = cm.t, cm.workload.k
+    cons = [TierCapacity(int(rng.integers(0, t)),
+                         float(k * rng.uniform(0.1, 2.0)))]
+    if rng.uniform() < 0.4:
+        lo = max(float(np.min(cm.read_latency)), 1e-6)
+        hi = float(np.max(cm.read_latency)) + 1e-6
+        cons.append(ReadLatencySLO(float(
+            10.0 ** rng.uniform(np.log10(lo), np.log10(hi)))))
+    return ConstraintSet(*cons)
+
+
+# ---------------------------------------------------------------------------
+# Degradation: empty / trivial constraints reproduce the closed form exactly
+# ---------------------------------------------------------------------------
+
+def test_empty_constraint_set_bit_identical():
+    rng = np.random.default_rng(0)
+    for t in (2, 3, 4):
+        for _ in range(10):
+            m = random_ntier_model(rng, t)
+            p0 = shp.plan_placement_ntier(m)
+            p1 = shp.plan_placement_ntier(m, constraints=ConstraintSet())
+            assert p0.total == p1.total  # bit-identical, not isclose
+            assert p0.boundaries == p1.boundaries
+            assert p0.migrate == p1.migrate and p0.strategy == p1.strategy
+
+
+def test_forced_constrained_path_trivial_constraints_bit_identical():
+    """The resource-augmented machinery itself (not just the dispatch)
+    must reproduce the unconstrained DP when every mask is trivial."""
+    rng = np.random.default_rng(1)
+    for t in (2, 3, 4):
+        m_models = [random_ntier_model(rng, t) for _ in range(16)]
+        cw = np.stack([m.cw for m in m_models])
+        cr = np.stack([m.cr for m in m_models])
+        cs = np.stack([m.cs for m in m_models])
+        n = np.array([float(m.workload.n_docs) for m in m_models])
+        k = np.array([float(m.workload.k) for m in m_models])
+        rpw = np.ones(len(m_models))
+        a = shp.plan_ntier_arrays(cw, cr, cs, n, k, rpw)
+        b = shp.plan_ntier_arrays(cw, cr, cs, n, k, rpw,
+                                  force_constrained=True)
+        np.testing.assert_array_equal(a["total"], b["total"])
+        np.testing.assert_array_equal(a["bounds"], b["bounds"])
+        np.testing.assert_array_equal(a["migrate"], b["migrate"])
+
+
+def test_t2_case_studies_unchanged_under_empty_constraints():
+    for case in (costs.case_study_1, costs.case_study_2):
+        cm = case()
+        legacy = shp.plan_placement(cm)
+        via_cons = shp.plan_placement(cm, constraints=ConstraintSet())
+        assert isinstance(legacy, shp.PlacementPlan)
+        assert math.isclose(via_cons.total if hasattr(via_cons, "total")
+                            else via_cons.best.total, legacy.best.total,
+                            rel_tol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Brute-force feasible-grid agreement (the acceptance bar: >= 100 models)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("t,seed,count", [(3, 11, 60), (4, 12, 60)])
+def test_constrained_matches_brute_force_feasible_grid(t, seed, count):
+    rng = np.random.default_rng(seed)
+    checked = infeasible = 0
+    for trial in range(count):
+        m = random_ntier_model(rng, t)
+        cset = random_constraints(rng, m)
+        plan = shp.plan_placement_ntier(m, constraints=cset)
+        bt, bb, bm = shp.brute_force_plan_ntier(m, grid=48,
+                                                constraints=cset)
+        if not plan.feasible:
+            infeasible += 1
+            assert not np.isfinite(bt), (trial, bt, bb, bm)
+            continue
+        checked += 1
+        # the plan the DP returns must be genuinely feasible ...
+        assert cset.feasible(m, plan.boundaries, plan.migrate), \
+            (trial, plan.boundaries, plan.migrate)
+        # ... and never lose to any feasible grid point
+        assert plan.total <= bt * (1 + 1e-9) + 1e-12, \
+            (trial, plan.total, bt, plan.strategy, bm)
+        # the grid can only beat the closed form by grid resolution
+        assert abs(plan.total - bt) <= 2e-2 * abs(bt) + 1e-12, \
+            (trial, plan.total, bt)
+    assert checked >= count * 0.8  # the generator rarely lands infeasible
+
+
+def test_deep_hierarchy_quantized_resource_dp():
+    """5-tier models have 4 boundary steps — past _ENUM_MAX_STEPS — so an
+    active SLO routes through the quantized resource-augmented DP. The
+    conservative rounding must keep every returned plan genuinely
+    feasible, within shouting distance of the feasible grid."""
+    rng = np.random.default_rng(61)
+    checked = 0
+    for trial in range(10):
+        m = random_ntier_model(rng, 5)
+        k = m.workload.k
+        lo = max(float(np.min(m.read_latency)), 1e-6)
+        hi = float(np.max(m.read_latency)) + 1e-6
+        cset = ConstraintSet(
+            TierCapacity(int(rng.integers(0, 5)),
+                         float(k * rng.uniform(0.2, 2.0))),
+            ReadLatencySLO(float(10.0 ** rng.uniform(np.log10(lo),
+                                                     np.log10(hi)))))
+        plan = shp.plan_placement_ntier(m, constraints=cset)
+        bt, _, _ = shp.brute_force_plan_ntier(m, grid=24, constraints=cset)
+        if not plan.feasible:
+            assert not np.isfinite(bt)
+            continue
+        checked += 1
+        assert cset.feasible(m, plan.boundaries, plan.migrate), (trial,)
+        if np.isfinite(bt):
+            # quantization is conservative: the DP may concede a little
+            # to the exact grid, but must stay in the same ballpark
+            assert plan.total <= bt * 1.15 + 1e-12, (trial, plan.total, bt)
+
+
+def test_infeasible_constraints_reported_not_planned():
+    m = random_ntier_model(np.random.default_rng(5), 3, with_latency=True)
+    # every tier capped below K -> nothing can hold the reservoir
+    cset = ConstraintSet(*[TierCapacity(t, m.workload.k * 0.3)
+                           for t in range(3)])
+    plan = shp.plan_placement_ntier(m, constraints=cset)
+    assert not plan.feasible and plan.strategy == "infeasible"
+    assert not np.isfinite(plan.total)
+    with pytest.raises(ValueError):
+        placement.from_plan(plan)
+    bt, _, _ = shp.brute_force_plan_ntier(m, constraints=cset)
+    assert not np.isfinite(bt)
+
+
+# ---------------------------------------------------------------------------
+# Constraint semantics: capacity clamps, SLO walks off slow tiers
+# ---------------------------------------------------------------------------
+
+def nvme_s3_model(n=int(1e7), k=int(1e5)):
+    nvme = costs.TierCosts("nvme", 0.0, 0.0, 0.01)
+    s3 = costs.TierCosts("s3", 0.005 / 1000, 0.0004 / 1000, 0.023)
+    topo = topology.TierTopology(tiers=(
+        topology.TierSpec(nvme, xfer_out_per_gb=0.2, read_latency_s=1e-4),
+        topology.TierSpec(s3, xfer_in_per_gb=0.02, read_latency_s=0.02)))
+    wl = costs.WorkloadSpec(n_docs=n, k=k, doc_gb=1e-4, window_months=1.0)
+    return topo.cost_model(wl)
+
+
+def test_hot_capacity_below_k_forces_early_demotion():
+    m = nvme_s3_model()
+    k = m.workload.k
+    free = shp.plan_placement_ntier(m)
+    assert free.boundaries[0] > k  # unconstrained holds the reservoir hot
+    cap0 = k // 20
+    plan = shp.plan_placement_ntier(
+        m, constraints=ConstraintSet(TierCapacity(0, cap0)))
+    assert plan.feasible and not plan.migrate
+    assert plan.boundaries[0] == pytest.approx(cap0)
+    occ = peak_occupancy(plan.boundaries, m.workload.n_docs, k, plan.migrate)
+    assert occ[0] <= cap0 * (1 + 1e-9)
+    assert plan.total >= free.total  # constraints never help
+
+
+def test_capacity_below_k_walks_cascade_off_the_capped_tier():
+    """The cascade holds the whole reservoir in every used tier
+    (boundaries gated to [K, N)), so a capacity below K on the hot tier
+    forces any surviving migration plan to skip that tier entirely —
+    its segment collapses to zero width and its occupancy to zero."""
+    topo = topology.aws_efs_s3_glacier()
+    wl = costs.WorkloadSpec(n_docs=int(1e8), k=int(1e5), doc_gb=1e-3,
+                            window_months=3.0)
+    m = topo.cost_model(wl)
+    base = shp.plan_placement_ntier(m)
+    assert base.migrate  # baseline: cascade wins
+    assert base.boundaries[0] > 0  # and genuinely uses the EFS tier
+    cap = wl.k // 2
+    plan = shp.plan_placement_ntier(
+        m, constraints=ConstraintSet(TierCapacity(0, cap)))
+    assert plan.feasible
+    occ = peak_occupancy(plan.boundaries, wl.n_docs, wl.k, plan.migrate)
+    assert occ[0] <= cap * (1 + 1e-9)
+    if plan.migrate:
+        assert plan.boundaries[0] == 0.0  # tier 0 skipped by the cascade
+
+
+def test_slo_forces_planner_off_cheapest_tier():
+    topo = topology.aws_archive_tiering()
+    wl = costs.WorkloadSpec(n_docs=int(1e7), k=int(1e5), doc_gb=1e-3,
+                            window_months=6.0)
+    m = topo.cost_model(wl)
+    free = shp.plan_placement_ntier(m)
+    lat_free = expected_read_latency(free.boundaries, wl.n_docs,
+                                     m.read_latency, free.migrate)
+    assert lat_free > 3600.0  # unconstrained parks survivors in Glacier
+    for slo in (3600.0, 60.0):
+        plan = shp.plan_placement_ntier(
+            m, constraints=ConstraintSet(ReadLatencySLO(slo)))
+        assert plan.feasible
+        lat = expected_read_latency(plan.boundaries, wl.n_docs,
+                                    m.read_latency, plan.migrate)
+        assert lat <= slo * (1 + 1e-9)
+        assert plan.total >= free.total
+
+
+def test_constraint_protocol_generic_type_used_by_verifier():
+    """Any object with feasible(cm, bounds, migrate) plugs into the
+    feasible-grid verifier."""
+
+    class NoMigration:
+        def feasible(self, cm, bounds, migrate):
+            return not migrate
+
+    topo = topology.aws_efs_s3_glacier()
+    wl = costs.WorkloadSpec(n_docs=int(1e8), k=int(1e5), doc_gb=1e-3,
+                            window_months=3.0)
+    m = topo.cost_model(wl)
+    bt_free, _, bm_free = shp.brute_force_plan_ntier(m)
+    assert bm_free
+    bt, _, bm = shp.brute_force_plan_ntier(
+        m, constraints=ConstraintSet(NoMigration()))
+    assert not bm and bt >= bt_free
+
+
+# ---------------------------------------------------------------------------
+# Fleet threading: plan_fleet masks, water-filling, no oversubscription
+# ---------------------------------------------------------------------------
+
+def test_plan_fleet_constrained_matches_scalar_constrained():
+    rng = np.random.default_rng(21)
+    models = []
+    for _ in range(24):
+        n = int(rng.integers(2_000, 100_000))
+        wl = costs.WorkloadSpec(n_docs=n, k=int(rng.integers(1, n // 10)),
+                                doc_gb=1.0, window_months=1.0)
+        models.append(costs.TwoTierCostModel(
+            tier_a=costs.TierCosts("a", *(rng.uniform(1e-8, 1e-3, 3))),
+            tier_b=costs.TierCosts("b", *(rng.uniform(1e-8, 1e-3, 3))),
+            workload=wl))
+    cset = ConstraintSet(TierCapacity(0, 50.0))
+    plan = planner.plan_fleet(models, constraints=cset)
+    assert plan.feasible is not None
+    for i, cm in enumerate(models):
+        ref = shp.plan_placement(cm, constraints=cset)
+        if not plan.feasible[i]:
+            assert not ref.feasible
+            continue
+        np.testing.assert_allclose(plan.r[i], ref.boundaries[0],
+                                   rtol=1e-9, atol=1e-9)
+        occ = peak_occupancy((plan.r[i],), cm.workload.n_docs,
+                             cm.workload.k, plan.migrate(i))
+        assert occ[0] <= 50.0 * (1 + 1e-9)
+
+
+def test_waterfill_conserves_budget_and_caps():
+    rng = np.random.default_rng(2)
+    for _ in range(50):
+        d = rng.uniform(0.0, 100.0, size=rng.integers(1, 40))
+        budget = float(rng.uniform(0.0, 1.2 * d.sum()))
+        g = waterfill(d, budget)
+        assert np.all(g <= d + 1e-9)
+        if d.sum() <= budget:
+            np.testing.assert_allclose(g, d)
+        else:
+            assert abs(g.sum() - budget) < 1e-6 * max(budget, 1.0)
+            # binding streams share one water level
+            lam = g[g < d - 1e-9]
+            if lam.size:
+                np.testing.assert_allclose(lam, lam[0], rtol=1e-9)
+
+
+def test_fleet_shared_capacity_never_oversubscribes():
+    rng = np.random.default_rng(23)
+    for trial in range(6):
+        models = [random_ntier_model(rng, int(rng.integers(2, 4)),
+                                     with_latency=False)
+                  for _ in range(10)]
+        total_k = sum(m.workload.k for m in models)
+        budget = float(total_k * rng.uniform(0.1, 0.6))
+        cset = ConstraintSet(TierCapacity(0, budget, shared=True))
+        plan = planner.plan_fleet_mixed(models, constraints=cset)
+        occ = sum(
+            peak_occupancy(plan.boundaries[i], m.workload.n_docs,
+                           m.workload.k, plan.migrate(i))[0]
+            for i, m in enumerate(models) if plan.feasible(i))
+        assert occ <= budget * (1 + 1e-9), (trial, occ, budget)
+
+
+def test_engine_rejects_infeasible_constrained_fleet():
+    m = nvme_s3_model(n=4_000, k=64)
+    cset = ConstraintSet(TierCapacity(0, 10.0), TierCapacity(1, 10.0))
+    with pytest.raises(ValueError, match="no feasible plan"):
+        StreamEngine([StreamSpec(stream_id=0, k=64, cost_model=m)],
+                     constraints=cset)
+
+
+def test_shared_capacity_rejected_outside_waterfill_path():
+    m = nvme_s3_model(n=4_000, k=64)
+    shared = ConstraintSet(TierCapacity(0, 5.0, shared=True))
+    with pytest.raises(ValueError, match="plan_fleet_mixed"):
+        planner.plan_fleet([costs.case_study_1()], constraints=shared)
+    with pytest.raises(ValueError, match="fleet-wide"):
+        planner.plan_fleet_mixed([m, m], constraints=[shared, shared])
+
+
+def test_two_shared_tiers_neither_oversubscribes():
+    """Re-planning for the second shared tier must not push the first
+    back over its budget (binding streams are frozen at their granted
+    usage of already-balanced tiers)."""
+    rng = np.random.default_rng(53)
+    for trial in range(4):
+        models = [random_ntier_model(rng, 3, with_latency=False)
+                  for _ in range(8)]
+        total_k = sum(m.workload.k for m in models)
+        c0 = float(total_k * rng.uniform(0.1, 0.4))
+        c1 = float(total_k * rng.uniform(0.1, 0.4))
+        plan = planner.plan_fleet_mixed(models, constraints=ConstraintSet(
+            TierCapacity(0, c0, shared=True),
+            TierCapacity(1, c1, shared=True)))
+        for tier, budget in ((0, c0), (1, c1)):
+            occ = sum(peak_occupancy(plan.boundaries[i],
+                                     m.workload.n_docs, m.workload.k,
+                                     plan.migrate(i))[tier]
+                      for i, m in enumerate(models) if plan.feasible(i))
+            assert occ <= budget * (1 + 1e-9), (trial, tier, occ, budget)
+
+
+def test_byte_capacity_checked_with_doc_gb():
+    docs, k = 32, 4
+    eng = StreamEngine([StreamSpec(stream_id=0, k=k, r=float(docs))])
+    for t in range(docs):
+        eng.ingest([0], [float(t)], [t])
+    eng.finalize()
+    byte_cap = ConstraintSet(TierCapacity(0, max_bytes=2 * 1e9 * 1e-3))
+    with pytest.raises(ValueError, match="doc_gb"):
+        eng.check_constraints(byte_cap)
+    # 4 docs x 1MB resident > 2MB budget -> flagged; 1KB docs fit
+    assert not eng.check_constraints(byte_cap, doc_gb=1e-3)["ok"]
+    assert eng.check_constraints(byte_cap, doc_gb=1e-6)["ok"]
+
+
+def test_topology_declared_caps_survive_explicit_constraint_sets():
+    """Adding an unrelated constraint must not drop a topology-declared
+    capacity; an explicit TierCapacity on that tier overrides it."""
+    nvme = costs.TierCosts("nvme", 0.0, 0.0, 0.01)
+    s3 = costs.TierCosts("s3", 0.005 / 1000, 0.0004 / 1000, 0.023)
+    cap0 = 5_000.0
+    topo = topology.TierTopology(tiers=(
+        topology.TierSpec(nvme, xfer_out_per_gb=0.2, read_latency_s=1e-4,
+                          capacity_docs=cap0),
+        topology.TierSpec(s3, xfer_in_per_gb=0.02, read_latency_s=0.02)))
+    wl = costs.WorkloadSpec(n_docs=int(1e7), k=int(1e5), doc_gb=1e-4,
+                            window_months=1.0)
+    m = topo.cost_model(wl)
+    # a non-binding SLO must keep the declared C_0 enforced
+    slo_only = shp.plan_placement_ntier(
+        m, constraints=ConstraintSet(ReadLatencySLO(1e9)))
+    assert slo_only.boundaries[0] <= cap0 * (1 + 1e-9)
+    # explicit inf on tier 0 lifts the declaration (the what-if baseline)
+    lifted = shp.plan_placement_ntier(
+        m, constraints=ConstraintSet(TierCapacity(0, math.inf)))
+    assert lifted.boundaries[0] > wl.k
+
+
+def test_brute_force_enforces_topology_declared_caps():
+    """The verifier must share the planner's ground truth: a topology
+    declaring a hot-tier capacity constrains the feasible grid even with
+    no explicit ConstraintSet."""
+    m = topology.hbm_dram_disk_preset(n_docs=50_000, k=1_000, doc_gb=1e-5,
+                                      window_seconds=600.0,
+                                      hbm_capacity_docs=50.0)
+    plan = shp.plan_placement_ntier(m)
+    bt, bb, bm = shp.brute_force_plan_ntier(m, grid=32)
+    occ = peak_occupancy(bb, m.workload.n_docs, m.workload.k, bm)
+    assert occ[0] <= 50.0 * (1 + 1e-9)
+    assert plan.total <= bt * (1 + 1e-9) + 1e-12
+
+
+def test_engine_reconciliation_enforces_topology_caps():
+    """Topology-declared capacities reach check_constraints through the
+    engine's cost models even when the explicit set only carries an SLO."""
+    docs, k = 48, 6
+    m = topology.hbm_dram_disk_preset(n_docs=docs, k=k, doc_gb=1e-5,
+                                      window_seconds=60.0,
+                                      hbm_capacity_docs=2.0)
+    eng = StreamEngine([StreamSpec(stream_id=0, k=k, cost_model=m)],
+                       constraints=ConstraintSet(ReadLatencySLO(1e9)))
+    # execute a policy that keeps everything hot, violating the declared cap
+    eng2 = StreamEngine([StreamSpec(stream_id=0, k=k, r=float(docs))])
+    for t in range(docs):
+        eng2.ingest([0], [float(t)], [t])
+    eng2.finalize()
+    # wire the capacity-declaring model onto the violating run's rows
+    eng2._model_of_row[0] = m
+    report = eng2.check_constraints(ConstraintSet(ReadLatencySLO(1e9)))
+    assert not report["ok"] and report["capacity_violations"][0, 0]
+    # the planned engine keeps the declared cap feasible at planning time
+    occ = peak_occupancy(eng.meter.boundaries[0][:m.t - 1],
+                         docs, k, bool(eng.meter.migrate[0]))
+    assert occ[0] <= 2.0 * (1 + 1e-9)
+
+
+def test_two_tier_slo_rejected_without_latency_metadata():
+    with pytest.raises(ValueError, match="read latencies"):
+        shp.plan_placement(costs.case_study_1(),
+                           constraints=ConstraintSet(ReadLatencySLO(1.0)))
+
+
+def test_shared_caps_rejected_by_single_stream_planner():
+    m = nvme_s3_model(n=4_000, k=64)
+    with pytest.raises(ValueError, match="plan_fleet_mixed"):
+        shp.plan_placement_ntier(
+            m, constraints=ConstraintSet(TierCapacity(0, 5.0, shared=True)))
+
+
+def test_plan_fleet_rejects_byte_capacities():
+    with pytest.raises(ValueError, match="document sizes"):
+        planner.plan_fleet([costs.case_study_1()],
+                           constraints=ConstraintSet(
+                               TierCapacity(0, max_bytes=1e9)))
+
+
+def test_plan_placement_rejects_exact_with_constraints():
+    with pytest.raises(ValueError, match="exact"):
+        shp.plan_placement(costs.case_study_1(), exact=True,
+                           constraints=ConstraintSet(TierCapacity(0, 10.0)))
+
+
+def test_meter_shared_byte_budget_checked():
+    docs, k = 32, 4
+    eng = StreamEngine([StreamSpec(stream_id=0, k=k, r=float(docs))])
+    for t in range(docs):
+        eng.ingest([0], [float(t)], [t])
+    eng.finalize()
+    shared = ConstraintSet(TierCapacity(0, max_bytes=2 * 1e9 * 1e-3,
+                                        shared=True))
+    with pytest.raises(ValueError, match="doc_gb"):
+        eng.check_constraints(shared)
+    bad = eng.check_constraints(shared, doc_gb=1e-3)  # 4 MB used > 2 MB
+    assert not bad["ok"] and "excess_bytes" in bad["shared_violations"][0]
+    assert eng.check_constraints(shared, doc_gb=1e-6)["ok"]
+
+
+def test_plan_fleet_mixed_unconstrained_path_unchanged():
+    rng = np.random.default_rng(3)
+    models = [random_ntier_model(rng, 3, with_latency=False)
+              for _ in range(8)]
+    a = planner.plan_fleet_mixed(models)
+    b = planner.plan_fleet_mixed(models, constraints=ConstraintSet())
+    np.testing.assert_array_equal(a.totals, b.totals)
+    assert a.boundaries == b.boundaries
+
+
+# ---------------------------------------------------------------------------
+# Metering: occupancy high-water marks and SLO checks at reconciliation
+# ---------------------------------------------------------------------------
+
+def test_meter_occupancy_hwm_matches_simulator():
+    rng = np.random.default_rng(31)
+    docs, k = 80, 6
+    specs = [
+        StreamSpec(stream_id=0, k=k, r=float(docs / 3)),
+        StreamSpec(stream_id=1, k=k, boundaries=(20.0, 50.0), migrate=True),
+        StreamSpec(stream_id=2, k=k, boundaries=(10.0, 40.0)),
+    ]
+    eng = StreamEngine(specs)
+    traces = np.stack([simulator.random_rank_trace(docs, rng)
+                       for _ in specs]).astype(np.float32)
+    for t in range(docs):
+        eng.ingest([s.stream_id for s in specs], traces[:, t],
+                   [t] * len(specs))
+    eng.finalize()
+    for i, s in enumerate(specs):
+        pol = placement.Policy(boundaries=s.explicit_boundaries(),
+                               migrate_at_r=s.migrate)
+        sim = simulator.simulate(traces[i].astype(np.float64), k, pol)
+        row = eng.stream_row(s.stream_id)
+        t_sim = sim.occupancy_hwm_per_tier.shape[0]
+        assert eng.meter.occupancy_hwm[row, :t_sim].tolist() == \
+            sim.occupancy_hwm_per_tier.tolist(), (i,)
+        assert eng.meter.occupancy_hwm[row, t_sim:].sum() == 0
+
+
+def test_meter_check_constraints_flags_violations():
+    docs, k = 32, 4
+    eng = StreamEngine([StreamSpec(stream_id=0, k=k, r=float(docs))])
+    for t in range(docs):  # ascending: everything writes, all hot
+        eng.ingest([0], [float(t)], [t])
+    eng.finalize()
+    ok = eng.check_constraints(ConstraintSet(TierCapacity(0, k)),
+                               latencies=[1e-4, 0.02])
+    assert ok["ok"]
+    bad = eng.check_constraints(ConstraintSet(TierCapacity(0, k - 1)))
+    assert not bad["ok"] and bad["capacity_violations"][0, 0]
+    slo = eng.check_constraints(ConstraintSet(ReadLatencySLO(1e-6)),
+                                latencies=[1e-4, 0.02])
+    assert not slo["ok"] and slo["slo_violations"][0]
+
+
+def test_simulator_constraint_report():
+    m = nvme_s3_model(n=4_000, k=64)
+    pol = placement.Policy(r=800.0)
+    res = simulator.simulate(
+        simulator.random_rank_trace(4_000, np.random.default_rng(7)),
+        64, pol, m)
+    assert res.occupancy_hwm_per_tier[0] == 64  # deterministic: b > K
+    good = res.check_constraints(ConstraintSet(TierCapacity(0, 64)), m)
+    assert good["ok"]
+    bad = res.check_constraints(ConstraintSet(TierCapacity(0, 63)), m)
+    assert not bad["ok"] and bad["capacity_violations"][0]
+    assert res.read_latency_mean > 0.0
+
+
+# ---------------------------------------------------------------------------
+# Minimum-storage-duration billing (S3-IA 30d / Glacier 90d)
+# ---------------------------------------------------------------------------
+
+def min_storage_model(min_days, window_months=0.5, n=6_000, k=96):
+    hot = costs.TierCosts("hot", 1e-6, 1e-6, 0.02)
+    cold = costs.TierCosts("cold", 2e-6, 2e-6, 0.004,
+                           min_storage_days=min_days)
+    topo = topology.TierTopology(tiers=(topology.TierSpec(hot),
+                                        topology.TierSpec(cold)))
+    wl = costs.WorkloadSpec(n_docs=n, k=k, doc_gb=1e-2,
+                            window_months=window_months)
+    return topo.cost_model(wl)
+
+
+def test_min_storage_days_zero_is_bit_identical():
+    a, b = min_storage_model(0.0), min_storage_model(90.0)
+    # the analytic rental floors at the minimum duration for short windows
+    np.testing.assert_array_equal(a.cs[:1], b.cs[:1])
+    assert b.cs[1] == pytest.approx(a.cs[1] * (3.0 / 0.5))
+    np.testing.assert_array_equal(a.min_storage_months, [0.0, 0.0])
+    np.testing.assert_array_equal(b.min_storage_months, [0.0, 3.0])
+
+
+def test_min_storage_billed_in_simulator():
+    rng = np.random.default_rng(41)
+    trace = simulator.random_rank_trace(6_000, rng)
+    pol = placement.Policy(r=1_000.0)
+    free = simulator.simulate(trace, 96, pol, min_storage_model(0.0))
+    billed = simulator.simulate(trace, 96, pol, min_storage_model(90.0))
+    # identical transactions, strictly more storage: every cold stay is
+    # topped up to 3 months (the window itself is only 0.5 months)
+    np.testing.assert_array_equal(free.writes_per_tier,
+                                  billed.writes_per_tier)
+    assert billed.cost_storage > free.cost_storage
+    cold_stays = billed.writes_per_tier[1]
+    rate = min_storage_model(90.0).storage_per_doc_month[1]
+    np.testing.assert_allclose(billed.doc_months_per_tier[1],
+                               cold_stays * 3.0, rtol=1e-9)
+    assert billed.cost_storage == pytest.approx(
+        float(billed.doc_months_per_tier @
+              min_storage_model(90.0).storage_per_doc_month))
+    assert rate > 0
+
+
+def test_min_storage_steers_planner_away_for_short_windows():
+    """With a 0.5-month window, a 90-day minimum makes the cold tier's
+    effective rental 6x — the planner must never prefer it more than the
+    un-floored model does."""
+    free = shp.plan_placement_ntier(min_storage_model(0.0))
+    floored = shp.plan_placement_ntier(min_storage_model(90.0))
+    assert floored.total >= free.total - 1e-12
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis properties (seeded sweep fallback, repo convention)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def check_trivial_constraints_bit_match(seed, t):
+    rng = np.random.default_rng(seed)
+    m = random_ntier_model(rng, t)
+    base = shp.plan_placement_ntier(m)
+    trivial = ConstraintSet(TierCapacity(0, np.inf),
+                            TierCapacity(t - 1, np.inf))
+    via = shp.plan_placement_ntier(m, constraints=trivial)
+    assert via.total == base.total
+    assert via.boundaries == base.boundaries
+    assert via.migrate == base.migrate
+    bt, _, _ = shp.brute_force_plan_ntier(m, constraints=trivial)
+    assert via.total <= bt * (1 + 1e-9) + 1e-12
+
+
+def check_shared_capacity_property(seed):
+    rng = np.random.default_rng(seed)
+    models = [random_ntier_model(rng, int(rng.integers(2, 4)),
+                                 with_latency=False) for _ in range(6)]
+    budget = float(sum(m.workload.k for m in models)
+                   * rng.uniform(0.05, 0.8))
+    plan = planner.plan_fleet_mixed(
+        models, constraints=ConstraintSet(TierCapacity(0, budget,
+                                                       shared=True)))
+    occ = sum(peak_occupancy(plan.boundaries[i], m.workload.n_docs,
+                             m.workload.k, plan.migrate(i))[0]
+              for i, m in enumerate(models) if plan.feasible(i))
+    assert occ <= budget * (1 + 1e-9)
+
+
+if HAVE_HYPOTHESIS:
+    @given(seed=st.integers(0, 2**31 - 1), t=st.sampled_from([3, 4]))
+    @settings(max_examples=30, deadline=None)
+    def test_infinite_capacity_bit_matches_property(seed, t):
+        check_trivial_constraints_bit_match(seed, t)
+
+    @given(seed=st.integers(0, 2**31 - 1))
+    @settings(max_examples=15, deadline=None)
+    def test_shared_capacity_never_oversubscribes_property(seed):
+        check_shared_capacity_property(seed)
+else:
+    def test_infinite_capacity_bit_matches_property():
+        for seed in range(20):
+            check_trivial_constraints_bit_match(seed, 3 + seed % 2)
+
+    def test_shared_capacity_never_oversubscribes_property():
+        for seed in range(8):
+            check_shared_capacity_property(seed)

@@ -86,6 +86,52 @@ def run(emit):
                                                   slo=slo), repeats=2)
         emit(f"planner.three_tier_cap_slo.M{m}", sec * 1e6,
              f"{m / sec:.0f} streams/s")
+    _run_online_resolve(emit, rng)
+
+
+def _online_models(rng, r, t):
+    """Heterogeneous N-tier models with interior crossovers for the
+    online re-solve latency rows."""
+    from repro.core import costs as costs_mod, topology
+    models = []
+    for _ in range(r):
+        wl = costs_mod.WorkloadSpec(n_docs=int(rng.integers(10_000, 50_000)),
+                                    k=int(rng.integers(16, 128)),
+                                    doc_gb=1e-4, window_months=0.5)
+        tiers = []
+        put = 1e-6
+        get = 3e-4
+        rent = 0.05
+        for _ in range(t):
+            tiers.append(topology.TierSpec(costs_mod.TierCosts(
+                "t", put_per_doc=put * float(rng.uniform(0.8, 1.2)),
+                get_per_doc=get * float(rng.uniform(0.8, 1.2)),
+                storage_per_gb_month=rent)))
+            put *= 40.0
+            get /= 40.0
+            rent /= 3.0
+        models.append(topology.TierTopology(tiers=tuple(tiers))
+                      .cost_model(wl))
+    return models
+
+
+def _run_online_resolve(emit, rng):
+    """Online re-plan latency: the constrained suffix re-solve for a batch
+    of drift-flagged streams (repro.online.replan) — the piece that must
+    stay off the ingest critical path when detections fire."""
+    from repro.online.replan import Replanner
+    for t, r in ((2, 256), (3, 256)):
+        models = _online_models(rng, r, t)
+        rp = Replanner(models)
+        n = np.array([m.workload.n_docs for m in models], np.float64)
+        n0 = 0.3 * n
+        rho = np.full(r, 6.0)
+        bounds = [tuple([0.29 * n[i]] * (t - 1)) for i in range(r)]
+        mig = np.zeros(r, bool)
+        sec = _time(lambda: rp.replan(np.arange(r), n0, rho, bounds, mig),
+                    repeats=3)
+        emit(f"online.resolve_{t}tier.R{r}", sec * 1e6,
+             f"{r / sec:.0f} streams/s suffix re-solve")
 
 
 def main():

@@ -1,10 +1,16 @@
 """Fleet-engine throughput: docs/sec of one jitted multi-stream step vs M.
 
 Times the device-side batched update (the jitted sort-merge over all
-streams) and the kernel-filtered path's algorithmic reference (the Pallas
-body itself runs in interpret mode off-TPU, so it is timed only at a token
-size for correctness, like kernels_bench). Standalone entry point emits
-``BENCH_streams.json``; also wired into ``benchmarks/run.py``.
+streams), the kernel-filtered path, and the online drift detector
+(``repro.online.drift.update`` — the (M,)-batched sequential statistics
+that ride inside the engine step). The Pallas-backed filtered path is
+*compiled* when a real TPU backend is present and timed across the full
+sweep; on CPU/GPU it falls back to interpret mode at a token size
+(correctness only) and the row label says so — the perf trajectory then
+carries compiled numbers only where they mean something. Standalone entry
+point writes ``BENCH_streams.json`` under ``--out-dir`` (default
+``bench_out/``; the committed repo-root copy is the canonical snapshot);
+also wired into ``benchmarks/run.py``.
 """
 from __future__ import annotations
 
@@ -15,10 +21,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.online import drift
 from repro.streams import engine
 
 K, BATCH = 16, 64
 SWEEP_M = (64, 256, 1024)
+DRIFT_M = (1024, 16384)
 
 
 def _time(fn, *args, reps=20):
@@ -32,9 +40,11 @@ def _time(fn, *args, reps=20):
 
 def run(emit):
     rng = np.random.default_rng(0)
+    on_tpu = jax.default_backend() == "tpu"
     upd = jax.jit(engine.update)
     filt = jax.jit(lambda st, s, i: engine.filtered_update(
         st, s, i, use_pallas=False))
+    pal = jax.jit(lambda st, s, i: engine.filtered_update(st, s, i))
     for m in SWEEP_M:
         state = engine.init(m, K)
         sc = jnp.asarray(rng.standard_normal((m, BATCH)), jnp.float32)
@@ -45,15 +55,37 @@ def run(emit):
         us = _time(filt, state, sc, ids)
         emit(f"streams.filtered_update_m{m}_k{K}_b{BATCH}", us,
              f"{m * BATCH / us * 1e6:.0f} docs/s filter+merge (jnp ref)")
-    # Pallas body correctness-scale timing (interpret mode off-TPU)
-    state = engine.init(8, K)
-    sc = jnp.asarray(rng.standard_normal((8, 256)), jnp.float32)
-    ids = jnp.tile(jnp.arange(256, dtype=jnp.int32), (8, 1))
-    pal = jax.jit(lambda st, s, i: engine.filtered_update(st, s, i,
-                                                          block_n=128))
-    us = _time(pal, state, sc, ids, reps=3)
-    emit(f"streams.filtered_update_pallas_interpret_m8_b256", us,
-         "Pallas 2-D grid (interpret mode, correctness only)")
+        if on_tpu:
+            us = _time(pal, state, sc, ids)
+            emit(f"streams.filtered_update_pallas_m{m}_k{K}_b{BATCH}", us,
+                 f"{m * BATCH / us * 1e6:.0f} docs/s Pallas 2-D grid "
+                 f"(compiled, tpu)")
+    if not on_tpu:
+        # interpret-mode fallback at a token size: correctness only, kept
+        # out of the compiled perf trajectory by the explicit label
+        state = engine.init(8, K)
+        sc = jnp.asarray(rng.standard_normal((8, 256)), jnp.float32)
+        ids = jnp.tile(jnp.arange(256, dtype=jnp.int32), (8, 1))
+        small = jax.jit(lambda st, s, i: engine.filtered_update(
+            st, s, i, block_n=128))
+        us = _time(small, state, sc, ids, reps=3)
+        emit("streams.filtered_update_pallas_interpret_m8_b256", us,
+             f"Pallas 2-D grid (interpret fallback, "
+             f"{jax.default_backend()}; correctness only)")
+    # online drift detector: the (M,)-batched per-chunk update
+    cfg = drift.DriftConfig()
+    for m in DRIFT_M:
+        kf = jnp.full((m,), float(K), jnp.float32)
+        step = jax.jit(lambda st, w, s: drift.update(st, w, s, kf, cfg))
+        # one BATCH-doc chunk per stream: prefix 512-BATCH -> 512
+        st = drift.init(m)._replace(
+            seen=jnp.full((m,), float(512 - BATCH), jnp.float32))
+        w = jnp.asarray(rng.poisson(2.0, m), jnp.float32)
+        seen = jnp.full((m,), 512.0, jnp.float32)
+        us = _time(step, st, w, seen)
+        emit(f"online.drift_update_m{m}", us,
+             f"{m * BATCH / us * 1e6:.0f} docs/s detector "
+             f"(M-batched {BATCH}-doc chunk stats)")
 
 
 def main():
@@ -62,8 +94,10 @@ def main():
     except ImportError:  # bare-script invocation: benchmarks/ is sys.path[0]
         from run import write_trajectory
     ap = argparse.ArgumentParser()
-    ap.add_argument("--json", default="BENCH_streams.json",
-                    help="output trajectory file")
+    ap.add_argument("--json", default=None,
+                    help="explicit output path (overrides --out-dir)")
+    ap.add_argument("--out-dir", default="bench_out",
+                    help="directory for BENCH_streams.json")
     args = ap.parse_args()
     rows = []
 
@@ -72,7 +106,7 @@ def main():
         rows.append({"name": name, "us_per_call": us, "derived": derived})
 
     run(emit)
-    print(f"wrote {write_trajectory('streams', rows, args.json)}")
+    print(f"wrote {write_trajectory('streams', rows, args.json, args.out_dir)}")
 
 
 if __name__ == "__main__":

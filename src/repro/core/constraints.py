@@ -84,6 +84,26 @@ def peak_occupancy_arrays(bounds: np.ndarray, n: np.ndarray, k: np.ndarray,
     return np.where(np.asarray(migrate, bool)[:, None], occ_mig, occ_static)
 
 
+def peak_occupancy_suffix(bounds, n, k, observed_hwm) -> np.ndarray:
+    """(M, T) expected occupancy high-water mark over the *rest* of the
+    window, conditioned on the observed prefix.
+
+    The high-water mark is monotone non-decreasing, so the suffix peak is
+    the elementwise max of the analytic static law at the (possibly
+    re-planned) boundary vector and the occupancy already witnessed by the
+    meter — a re-plan can stop a tier from growing further but can never
+    un-ring the bell on a peak that already happened. Used by the online
+    re-planner and the mid-window admission negotiation
+    (``repro.online``). ``bounds`` (M, T-1), ``observed_hwm`` (M, T).
+    """
+    bounds = np.atleast_2d(np.asarray(bounds, np.float64))
+    m = bounds.shape[0]
+    analytic = peak_occupancy_arrays(bounds, np.broadcast_to(n, (m,)),
+                                     np.broadcast_to(k, (m,)),
+                                     np.zeros(m, bool))
+    return np.maximum(analytic, np.asarray(observed_hwm, np.float64))
+
+
 def expected_read_latency(bounds, n: float, latencies, migrate: bool) -> float:
     """Expected per-survivor read latency at window end.
 

@@ -719,6 +719,27 @@ def _solve_resource_dp(obj: BoundaryObjective, fs, c):
     return interior, bounds
 
 
+def solve_separable_terms(obj: BoundaryObjective, fs, c):
+    """Minimize a *custom* separable objective over the monotone boundary
+    grid, under ``obj``'s compiled constraint structure.
+
+    ``fs`` is a list of per-boundary term matrices (M, C) on candidate grid
+    ``c`` (M, C) — any separable cost, not necessarily the planner's
+    ``Δcw·W + Δlin·b`` form. ``obj`` supplies the feasibility side only:
+    pairwise middle-tier capacity bounds, the quantized/exact latency
+    budget, and the enum-vs-DP dispatch. This is the entry point the
+    online re-planner uses to re-run the constrained boundary solve over
+    a window *suffix*, where the cost terms gain drift-conditioned write
+    laws and relocation billing that the a-priori objective doesn't have.
+
+    Returns (interior_val (M,), bounds (M, Ts-1)); +inf where no feasible
+    monotone vector exists.
+    """
+    if obj.constrained and not obj.interior:
+        return _solve_resource_dp(obj, fs, c)
+    return _solve_unconstrained(fs, c)
+
+
 def _solve_boundaries(cw_s, lin_s, n, k, interior=False, *, cap_s=None,
                       lat_s=None, slo=None):
     """Minimize the separable boundary objective for one strategy family.

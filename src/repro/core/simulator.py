@@ -41,6 +41,7 @@ class SimResult:
         default_factory=lambda: np.zeros(1, np.int64))  # (T-1,) hops per boundary
     occupancy_hwm_per_tier: np.ndarray = field(
         default_factory=lambda: np.zeros(1, np.int64))  # (T,) peak residents
+    relocated: int = 0  # residents moved by mid-window boundary re-plans
     read_latency_mean: float = 0.0  # realized per-survivor read latency (s)
     cost_writes: float = 0.0
     cost_reads: float = 0.0
@@ -77,7 +78,8 @@ CostModel = Union[TwoTierCostModel, NTierCostModel]
 
 def simulate(scores: np.ndarray, k: int, policy: Policy,
              cost_model: Optional[CostModel] = None,
-             storage_bound: bool = False) -> SimResult:
+             storage_bound: bool = False,
+             boundary_schedule: Optional[list] = None) -> SimResult:
     """Replay ``scores`` (interestingness trace, one doc per index).
 
     Exact reservoir semantics: doc i is written iff it ranks in the top-K of
@@ -87,11 +89,22 @@ def simulate(scores: np.ndarray, k: int, policy: Policy,
     upper bound (K docs · full window · max-rate) instead of metered
     doc-months. Migrating policies cascade the residents of tier t-1 into
     tier t when the position crosses boundary t, each hop charged eq. 19.
+
+    ``boundary_schedule`` replays mid-window re-planning (``repro.online``):
+    a sorted list of ``(position, boundaries)`` pairs — before processing
+    doc ``position`` the placement switches to the new boundary vector,
+    residents whose static tier changes are relocated (each move billed
+    ``cr_src + cw_dst``, counted in ``SimResult.relocated``), and later
+    writes/reads follow the new boundaries. Only non-migrating policies can
+    be re-scheduled (the cascade's floor semantics would be ambiguous).
     """
     scores = np.asarray(scores, dtype=np.float64)
     n = scores.shape[0]
     if not 0 < k < n:
         raise ValueError(f"require 0 < k < n, got k={k} n={n}")
+    schedule = sorted(boundary_schedule) if boundary_schedule else []
+    if schedule and policy.migrate_at_r:
+        raise ValueError("boundary_schedule requires a non-migrating policy")
 
     nt = None
     if cost_model is not None:
@@ -133,7 +146,35 @@ def simulate(scores: np.ndarray, k: int, policy: Policy,
         months = (end_i - write_index[doc]) * month_per_doc_slot
         doc_months[t] += max(months, float(min_months[t]))
 
+    def _move_doc(doc: int, dst: int, i: int) -> int:
+        """Hop one resident to tier ``dst`` at position ``i`` (top up its
+        rental, re-tier, bill the eq. 19 read+write, shift occupancy);
+        returns the source tier so the caller can bump its own counter."""
+        src = tier_of_doc[doc]
+        _charge_rental(doc, i)
+        tier_of_doc[doc] = dst
+        write_index[doc] = i
+        mig_reads[src] += 1
+        mig_writes[dst] += 1
+        occupancy[src] -= 1
+        occupancy[dst] += 1
+        return src
+
+    relocated = 0
+    sched_idx = 0
     for i in range(n):
+        while sched_idx < len(schedule) and i >= schedule[sched_idx][0]:
+            # mid-window re-plan: swap the placement and relocate residents
+            # whose static tier changed (billed like an eq. 19 hop)
+            policy = Policy(boundaries=tuple(float(b)
+                                             for b in schedule[sched_idx][1]),
+                            migrate_at_r=False, name=policy.name)
+            sched_idx += 1
+            for doc in list(tier_of_doc):
+                dst = min(policy.tier_of(doc), t_tiers - 1)
+                if dst != tier_of_doc[doc]:
+                    _move_doc(doc, dst, i)
+                    relocated += 1
         if floor < len(mig_ats) and i >= mig_ats[floor]:
             # every boundary the position has crossed fires at once:
             # residents hop *directly* to the highest crossed tier, so
@@ -142,16 +183,9 @@ def simulate(scores: np.ndarray, k: int, policy: Policy,
             while dst < len(mig_ats) and i >= mig_ats[dst]:
                 dst += 1
             for doc in list(tier_of_doc):
-                src = tier_of_doc[doc]
-                if src < dst:
-                    _charge_rental(doc, i)
-                    tier_of_doc[doc] = dst
-                    write_index[doc] = i
+                if tier_of_doc[doc] < dst:
+                    _move_doc(doc, dst, i)
                     migrated_per_boundary[dst - 1] += 1
-                    mig_reads[src] += 1
-                    mig_writes[dst] += 1
-                    occupancy[src] -= 1
-                    occupancy[dst] += 1
             floor = dst
         entry = (scores[i], -i)
         if len(heap) < k:
@@ -190,7 +224,8 @@ def simulate(scores: np.ndarray, k: int, policy: Policy,
                     evictions=evictions, cum_writes=cum_writes,
                     doc_months_per_tier=doc_months, survivor_ids=survivors,
                     migrated_per_boundary=migrated_per_boundary,
-                    occupancy_hwm_per_tier=occupancy_hwm)
+                    occupancy_hwm_per_tier=occupancy_hwm,
+                    relocated=relocated)
 
     if nt is not None:
         # the guard above forces t_tiers == nt.t whenever nt is given
@@ -211,6 +246,34 @@ def random_rank_trace(n: int, rng: np.random.Generator) -> np.ndarray:
     """A trace satisfying the paper's assumption exactly: ranks are a uniform
     random permutation (scores i.u.d.)."""
     return rng.permutation(n).astype(np.float64)
+
+
+def drift_weights(n: int, multipliers) -> np.ndarray:
+    """(n,) per-index record-rate weights from a piecewise schedule of
+    ``(start_index, multiplier)`` change points (implicit ``(0, 1.0)``
+    head). Weight ``θ_i`` is the multiplier active at index i."""
+    w = np.ones(n, np.float64)
+    for start, mult in sorted(multipliers):
+        if mult <= 0:
+            raise ValueError("rate multipliers must be positive")
+        w[int(start):] = float(mult)
+    return w
+
+
+def drifted_rank_trace(n: int, rng: np.random.Generator,
+                       multipliers) -> np.ndarray:
+    """A trace violating the i.u.d. assumption with *known*, piecewise
+    drift: scores follow the weighted-record model (Yang 1975) — doc i
+    draws ``score_i = −E_i/θ_i`` with ``E_i ~ Exp(1)``, so the probability
+    that doc i beats all earlier docs is exactly ``θ_i / Σ_{j<=i} θ_j``
+    and the reservoir-entry rate is ``≈ min(1, K·θ_i/Σ_{j<=i} θ_j)``
+    instead of the null ``K/(i+1)`` law. ``multipliers`` is a schedule of
+    ``(start_index, multiplier)`` pairs (``drift_weights``); constant
+    weight 1 recovers ``random_rank_trace`` in distribution. Ground truth
+    for validating ``repro.online``'s drift detection and re-planning.
+    """
+    theta = drift_weights(n, multipliers)
+    return -rng.exponential(size=n) / theta
 
 
 def grn_entropy_trace(n: int, rng: np.random.Generator,

@@ -5,6 +5,8 @@
 #   topk_filter    — streaming reservoir threshold scan (Fig. 2/3 inner loop)
 #   batched_topk   — 2-D (stream, tile) threshold scan for the multi-tenant
 #                     fleet engine in repro.streams
+#   tier_assign    — finalize-time (M, T) tier assignment of survivor
+#                     payloads against per-stream boundary vectors
 #   flash_attention — fused attention (removes the S² HBM score traffic
 #                     identified as the dominant train-cell roofline term)
-from . import batched_topk, entropy_scores, flash_attention, topk_filter  # noqa: F401
+from . import batched_topk, entropy_scores, flash_attention, tier_assign, topk_filter  # noqa: F401

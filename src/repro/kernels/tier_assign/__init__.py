@@ -1,0 +1,2 @@
+from . import ops, ref  # noqa: F401
+from .ops import quantize_boundaries, tier_assign  # noqa: F401

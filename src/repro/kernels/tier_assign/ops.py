@@ -1,0 +1,71 @@
+"""Public wrapper for the finalize-time tier assignment: quantize the
+float boundary vectors to exact integer thresholds, pad the survivor
+axis, run the 2-D kernel (interpret off-TPU), strip the padding.
+
+Boundary quantization: survivor ids are integers, so ``id >= b`` for a
+float boundary b is exactly ``id >= ceil(b)`` — the comparison the kernel
+runs in int32, bit-matching the float64 host meter without float32
+precision hazards at large stream positions. +inf boundaries (the
+padding convention for mixed-depth fleets) map to INT32_MAX, which no
+doc id reaches.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ref
+from .tier_assign import tier_assign_pallas
+
+_INT_MAX = np.iinfo(np.int32).max
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:
+        return False
+
+
+def quantize_boundaries(bounds) -> np.ndarray:
+    """(M, B) float boundary vectors -> exact int32 thresholds."""
+    b = np.asarray(bounds, np.float64)
+    return np.where(np.isfinite(b),
+                    np.clip(np.ceil(b), 0, _INT_MAX), _INT_MAX
+                    ).astype(np.int32)
+
+
+@partial(jax.jit, static_argnames=("n_tiers", "block_k", "use_pallas"))
+def _assign(ids, bounds_int, floor, *, n_tiers, block_k, use_pallas):
+    m, k = ids.shape
+    bk = min(block_k, max(k, 8))
+    pad = (-k) % bk
+    idp = jnp.pad(ids.astype(jnp.int32), ((0, 0), (0, pad)),
+                  constant_values=-1)
+    if use_pallas:
+        tier, counts = tier_assign_pallas(idp, bounds_int, floor,
+                                          n_tiers=n_tiers, block_k=bk,
+                                          interpret=not _on_tpu())
+    else:
+        tier, counts = ref.tier_assign(idp, bounds_int, floor, n_tiers)
+    return tier[:, :k], counts
+
+
+def tier_assign(ids, bounds, floor=None, *, n_tiers: int | None = None,
+                block_k: int = 128, use_pallas: bool = True):
+    """ids (M, K) int survivor ids (-1 pad) vs per-stream float boundary
+    vectors ``bounds`` (M, B; +inf pads shallower streams) and optional
+    cascade floors (M,). Returns (tier (M, K) int32 with -1 at padding,
+    counts (M, T) int32 survivors per tier)."""
+    ids = jnp.asarray(ids, jnp.int32)
+    bq = jnp.asarray(quantize_boundaries(bounds))
+    t = n_tiers if n_tiers is not None else bq.shape[1] + 1
+    if floor is None:
+        floor = jnp.zeros((ids.shape[0],), jnp.int32)
+    else:
+        floor = jnp.asarray(floor, jnp.int32)
+    return _assign(ids, bq, floor, n_tiers=int(t), block_k=block_k,
+                   use_pallas=use_pallas)

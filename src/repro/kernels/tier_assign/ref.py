@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the finalize-time tier-assignment kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def tier_assign(ids, bounds_int, floor, n_tiers: int):
+    ids = ids.astype(jnp.int32)
+    valid = ids >= 0
+    tier = (ids[:, :, None] >= bounds_int[:, None, :]).sum(-1)
+    tier = jnp.maximum(tier.astype(jnp.int32), floor[:, None])
+    tier = jnp.minimum(tier, n_tiers - 1)
+    tier = jnp.where(valid, tier, -1)
+    one_hot = (tier[:, :, None] == jnp.arange(n_tiers)[None, None, :])
+    counts = (one_hot & valid[:, :, None]).sum(axis=1).astype(jnp.int32)
+    return tier, counts

@@ -1,0 +1,16 @@
+# Drift-aware online re-planning: closes the loop from metering back into
+# the paper's proactive closed-form planner.
+#   drift     — sequential entry-rate statistics vs the analytic K/t law,
+#               (M,)-batched inside the jitted engine step (Bernstein-
+#               bounded detection, CUSUM diagnostics, rho-hat estimate)
+#   replan    — constrained BoundaryObjective re-solve over the remaining
+#               window suffix (drift-conditioned laws, hop-priced
+#               relocation bill, hysteresis)
+#   admission — negotiate K / window length for tenants whose constrained
+#               plan is infeasible, instead of rejecting them
+#   evaluate  — realized-cost harness: engine closed loop vs static plan
+#               vs a hindsight drift-aware oracle (core.simulator)
+from . import admission, drift, evaluate, replan  # noqa: F401
+from .admission import AdmissionController, AdmissionDecision  # noqa: F401
+from .drift import DriftConfig, DriftEstimator  # noqa: F401
+from .replan import Replanner, ReplanConfig, ReplanDecision  # noqa: F401

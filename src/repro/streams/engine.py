@@ -138,14 +138,20 @@ def evicted_ids(old: BatchedReservoirState,
     return jnp.where(ev, old.ids, PAD_ID)
 
 
-def _make_step(use_kernel_filter: bool, block_n: int):
+def _make_step(use_kernel_filter: bool, block_n: int, drift_cfg=None,
+               bucket_ks: Tuple[int, ...] = ()):
     """One jitted step over ALL buckets: states/batches are same-length
     tuples (the pytree structure is static, so the whole fleet advances in
-    a single XLA computation)."""
+    a single XLA computation). With ``drift_cfg`` (online re-planning) the
+    step also advances each bucket's drift-detector state from the chunk's
+    write counts — the sequential statistics stay (M,)-batched on device.
+    """
+    if drift_cfg is not None:
+        from repro.online import drift as drift_mod
 
-    def step(states, batches):
-        new_states, wrotes, evs = [], [], []
-        for st, (s, i) in zip(states, batches):
+    def step(states, batches, dstates):
+        new_states, wrotes, evs, new_dstates = [], [], [], []
+        for bi, (st, (s, i)) in enumerate(zip(states, batches)):
             if use_kernel_filter and s.shape[1] >= st.scores.shape[1]:
                 new, wrote = filtered_update(st, s, i, block_n=block_n)
             else:
@@ -153,7 +159,12 @@ def _make_step(use_kernel_filter: bool, block_n: int):
             new_states.append(new)
             wrotes.append(wrote)
             evs.append(evicted_ids(st, new))
-        return tuple(new_states), tuple(wrotes), tuple(evs)
+            if drift_cfg is not None:
+                new_dstates.append(drift_mod.update(
+                    dstates[bi], wrote.sum(axis=1), new.seen,
+                    float(bucket_ks[bi]), drift_cfg))
+        return tuple(new_states), tuple(wrotes), tuple(evs), \
+            tuple(new_dstates)
 
     return jax.jit(step)
 
@@ -161,6 +172,37 @@ def _make_step(use_kernel_filter: bool, block_n: int):
 # ---------------------------------------------------------------------------
 # Fleet orchestration
 # ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ReplanEvent:
+    """One online re-planning decision (``StreamEngine.replan_events``)."""
+
+    stream_id: int
+    row: int
+    position: int  # docs the stream had observed at decision time
+    rho: float  # detector's rate-multiplier estimate
+    old_bounds: Tuple[float, ...]
+    new_bounds: Tuple[float, ...]
+    applied: bool
+    feasible: bool  # constrained suffix re-solve found a feasible plan
+    suffix_cost_old: float
+    suffix_cost_new: float
+    move_bill: float  # expected relocation cost priced into the decision
+    moved_docs: int  # residents actually re-tiered by the meter
+
+
+@dataclass(frozen=True)
+class AdmissionEvent:
+    """Advisory terms for a stream whose constrained suffix re-solve was
+    infeasible (``StreamEngine.admission_events``): the negotiated K /
+    window apply at the tenant's next window — a live reservoir row
+    cannot be resized mid-window."""
+
+    stream_id: int
+    row: int
+    position: int
+    decision: object  # online.admission.AdmissionDecision
+
 
 @dataclass(frozen=True)
 class StreamSpec:
@@ -200,7 +242,7 @@ class StreamEngine:
 
     def __init__(self, specs: Sequence[StreamSpec], *,
                  use_kernel_filter: bool = False, block_n: int = 512,
-                 constraints=None):
+                 constraints=None, replan=None):
         if not specs:
             raise ValueError("need at least one stream")
         by_id = {s.stream_id: s for s in specs}
@@ -255,10 +297,35 @@ class StreamEngine:
                     bounds.append(b_of[sid])
                     migs.append(mig_of[sid])
             offset += b.m
+        self._sid_of_row = {row: sid for sid, row in self._row_of.items()}
         self.meter = metering.FleetMeter(ks, migrate=migs, boundaries=bounds)
         self._states: List[BatchedReservoirState] = [
             init(b.m, b.k) for b in self.buckets]
-        self._step = _make_step(use_kernel_filter, block_n)
+        # online re-planning: drift detector inside the jitted step,
+        # boundary deltas applied between chunks (repro.online)
+        self.replan_config = replan
+        self.replan_events: List[ReplanEvent] = []
+        self.admission_events: List[AdmissionEvent] = []
+        self._drift_states = None
+        if replan is not None:
+            from repro.online import drift as drift_mod
+            from repro.online.replan import Replanner
+            cset_arg = constraints
+            if isinstance(constraints, (list, tuple)):
+                # per-spec constraint lists align with the specs sequence;
+                # the replanner indexes by global row
+                by_sid = {s.stream_id: c
+                          for s, c in zip(specs, constraints)}
+                cset_arg = [by_sid[self._sid_of_row[row]]
+                            for row in range(self.m)]
+            self._replanner = Replanner(
+                [self._model_of_row.get(row) for row in range(self.m)],
+                constraints=cset_arg, config=replan)
+            self._drift_states = [drift_mod.init(b.m) for b in self.buckets]
+        self._step = _make_step(
+            use_kernel_filter, block_n,
+            drift_cfg=None if replan is None else replan.drift,
+            bucket_ks=tuple(b.k for b in self.buckets))
 
     @property
     def m(self) -> int:
@@ -278,7 +345,10 @@ class StreamEngine:
         Re-observations across batches are deduped by the merge itself."""
         routed = self.router.route(stream_ids, scores, doc_ids, pad_to=pad_to)
         batches = tuple((jnp.asarray(s), jnp.asarray(i)) for s, i in routed)
-        new_states, wrotes, evs = self._step(tuple(self._states), batches)
+        dstates = (tuple(self._drift_states)
+                   if self._drift_states is not None else ())
+        new_states, wrotes, evs, new_dstates = self._step(
+            tuple(self._states), batches, dstates)
         self._states = list(new_states)
         for bi in range(len(self.buckets)):
             _, dense_ids = routed[bi]
@@ -286,6 +356,110 @@ class StreamEngine:
                                      np.asarray(wrotes[bi]),
                                      np.asarray(evs[bi]),
                                      np.asarray(new_states[bi].ids))
+        if self._drift_states is not None:
+            self._drift_states = list(new_dstates)
+            self._maybe_replan()
+
+    def _maybe_replan(self) -> None:
+        """Between chunks: re-plan the streams whose drift detector fired,
+        apply the boundary deltas to the meter (re-tiering residents, with
+        the relocation bill already priced into the decision), and reset
+        the consumed detector evidence."""
+        from repro.online import drift as drift_mod
+        fired_rows, rhos = [], []
+        bucket_of, row_in_bucket = [], []
+        for bi in range(len(self.buckets)):
+            ds = self._drift_states[bi]
+            fired = np.asarray(ds.fired)
+            if not fired.any():
+                continue
+            rho_b = np.asarray(drift_mod.rho_hat(ds,
+                                                 self.replan_config.drift))
+            for j in np.flatnonzero(fired):
+                fired_rows.append(int(self._global_rows[bi][j]))
+                rhos.append(float(rho_b[j]))
+                bucket_of.append(bi)
+                row_in_bucket.append(int(j))
+        if not fired_rows:
+            return
+        rows = np.asarray(fired_rows, np.int64)
+        bounds = []
+        for row in rows:
+            cm = self._model_of_row.get(row)
+            b = self.meter.boundaries[row]
+            depth = (cm.t - 1 if hasattr(cm, "t")
+                     else int(np.isfinite(b).sum()))
+            bounds.append(tuple(b[:depth]))
+        dec = self._replanner.replan(rows, self.meter.observed[rows],
+                                     np.asarray(rhos), bounds,
+                                     self.meter.migrate[rows],
+                                     hwm=self.meter.occupancy_hwm[rows])
+        touched_buckets = set()
+        for j, row in enumerate(rows):
+            if not dec.considered[j]:
+                continue  # no model / cascade / window over: nothing to log
+            moved = 0
+            if not dec.feasible[j]:
+                self._negotiate_admission(int(row), int(dec.n_seen[j]))
+            if dec.applied[j]:
+                bi, jb = bucket_of[j], row_in_bucket[j]
+                moved = self.meter.apply_boundaries(
+                    int(row), dec.new_bounds[j],
+                    np.asarray(self._states[bi].ids[jb]))
+                touched_buckets.add(bi)
+            self.replan_events.append(ReplanEvent(
+                stream_id=self._sid_of_row[int(row)], row=int(row),
+                position=int(dec.n_seen[j]), rho=float(dec.rho[j]),
+                old_bounds=dec.old_bounds[j], new_bounds=dec.new_bounds[j],
+                applied=bool(dec.applied[j]), feasible=bool(dec.feasible[j]),
+                suffix_cost_old=float(dec.suffix_cost_old[j]),
+                suffix_cost_new=float(dec.suffix_cost_new[j]),
+                move_bill=float(dec.move_bill[j]), moved_docs=moved))
+        # boundary deltas are placement metadata: the reservoirs themselves
+        # must be untouched — every affected bucket keeps the sorted-desc
+        # score invariant the merge relies on
+        for bi in touched_buckets:
+            scores = np.asarray(self._states[bi].scores)
+            # note -inf pads diff to NaN on unfull rows — only a strictly
+            # positive diff is a genuine order violation
+            assert not np.any(np.diff(scores, axis=1) > 0), \
+                "re-plan corrupted reservoir score order"
+        for bi in set(bucket_of):
+            mask = np.zeros(self.buckets[bi].m, bool)
+            mask[[row_in_bucket[j] for j in range(len(rows))
+                  if bucket_of[j] == bi]] = True
+            self._drift_states[bi] = drift_mod.reset_where(
+                self._drift_states[bi], jnp.asarray(mask))
+
+    def _negotiate_admission(self, row: int, position: int) -> None:
+        """A constrained suffix re-solve found no feasible plan (or the
+        observed occupancy already violates a capacity): negotiate
+        next-window terms for the tenant instead of silently dropping the
+        event."""
+        from repro.online.admission import AdmissionController
+        cm = self._model_of_row.get(row)
+        if cm is None:
+            return
+        cset = self._replanner.csets[row]
+        decision = AdmissionController(cset).admit(
+            cm.as_ntier() if isinstance(cm, TwoTierCostModel) else cm)
+        self.admission_events.append(AdmissionEvent(
+            stream_id=self._sid_of_row[row], row=row, position=position,
+            decision=decision))
+
+    def drift_scores(self) -> Dict[int, float]:
+        """{stream_id: normalized change score} (>= 1 fires; online mode
+        only)."""
+        from repro.online import drift as drift_mod
+        if self._drift_states is None:
+            raise ValueError("engine built without replan=")
+        out = {}
+        for bi, b in enumerate(self.buckets):
+            sc = np.asarray(drift_mod.scores(self._drift_states[bi],
+                                             self.replan_config.drift))
+            out.update({sid: float(sc[j])
+                        for j, sid in enumerate(b.stream_ids)})
+        return out
 
     def states(self) -> List[BatchedReservoirState]:
         return list(self._states)
@@ -315,6 +489,32 @@ class StreamEngine:
             self.meter.record_reads(self._global_rows[bi],
                                     np.asarray(self._states[bi].ids))
         return self.survivors()
+
+    def finalize_tiers(self, use_pallas: bool = True) -> Dict[int, Dict]:
+        """Device-side finalize-time tier assignment: one 2-D
+        ``kernels.tier_assign`` pass per bucket maps every survivor id
+        against its stream's boundary vector (and cascade floor) to the
+        tier its final read must hit, plus the per-tier survivor counts —
+        the bucketed gather for issuing per-tier reads. Bit-matches the
+        host meter's tier attribution (asserted in tests).
+
+        Returns {stream_id: {"ids", "tiers", "counts"}}.
+        """
+        from repro.kernels import tier_assign as ta
+        out: Dict[int, Dict] = {}
+        for bi, b in enumerate(self.buckets):
+            rows = self._global_rows[bi]
+            tier, counts = ta.tier_assign(
+                self._states[bi].ids, self.meter.boundaries[rows],
+                self.meter.floor[rows], n_tiers=self.meter.n_tiers,
+                use_pallas=use_pallas)
+            tier = np.asarray(tier)
+            counts = np.asarray(counts)
+            ids = np.asarray(self._states[bi].ids)
+            for j, sid in enumerate(b.stream_ids):
+                out[sid] = {"ids": ids[j], "tiers": tier[j],
+                            "counts": counts[j]}
+        return out
 
     def check_constraints(self, constraints=None, latencies=None,
                           doc_gb=None) -> Dict:

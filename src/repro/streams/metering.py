@@ -76,6 +76,7 @@ class FleetMeter:
         self.reads = np.zeros((m, self.n_tiers), np.int64)
         self.deletes = np.zeros((m, self.n_tiers), np.int64)
         self.migrations = np.zeros(m, np.int64)
+        self.relocations = np.zeros(m, np.int64)  # docs re-tiered by re-plans
         # current residents per tier and the running high-water mark,
         # sampled after each recorded step (exact vs the simulator at W=1)
         self.occupancy = np.zeros((m, self.n_tiers), np.int64)
@@ -178,6 +179,43 @@ class FleetMeter:
         occ[np.arange(rows.shape[0]), tgt] += moved
         self.occupancy[rows] = occ
         self.floor[rows] = target[firing]
+
+    def apply_boundaries(self, row: int, new_bounds, state_ids) -> int:
+        """Swap one stream's boundary vector mid-window (online re-plan).
+
+        ``state_ids`` are the stream's current resident doc ids (-1 pads).
+        Residents whose static tier changes under the new vector are
+        re-tiered in place — counted in ``relocations`` and moved between
+        the occupancy counters, so capacity reconciliation keeps seeing
+        where documents actually live. Later writes, deletes and the
+        final read all follow the new boundaries. Migrating (cascade)
+        streams cannot be re-planned (the floor semantics would be
+        ambiguous). Returns the number of relocated residents.
+        """
+        if self.migrate[row]:
+            raise ValueError(f"stream row {row} runs a migration cascade — "
+                             "online re-planning only supports static "
+                             "placements")
+        bs = tuple(float(b) for b in new_bounds)
+        if any(b2 < b1 for b1, b2 in zip(bs, bs[1:])):
+            raise ValueError("boundaries must be non-decreasing")
+        if len(bs) > self.boundaries.shape[1]:
+            raise ValueError(f"stream row {row}: {len(bs)} boundaries "
+                             f"exceed the fleet-wide maximum depth "
+                             f"{self.boundaries.shape[1]}")
+        ids = np.asarray(state_ids).reshape(-1)
+        ids = ids[ids >= 0]
+        old_tiers = (ids[:, None] >= self.boundaries[row][None, :]).sum(1)
+        self.boundaries[row, :] = np.inf
+        self.boundaries[row, : len(bs)] = bs
+        new_tiers = (ids[:, None] >= self.boundaries[row][None, :]).sum(1)
+        moved = int(np.sum(new_tiers != old_tiers))
+        self.relocations[row] += moved
+        occ = np.bincount(new_tiers, minlength=self.n_tiers)
+        self.occupancy[row] = occ[: self.n_tiers]
+        self.occupancy_hwm[row] = np.maximum(self.occupancy_hwm[row],
+                                             self.occupancy[row])
+        return moved
 
     def record_reads(self, stream_rows, doc_ids) -> None:
         """Account the end-of-window top-K read (the consumer side)."""

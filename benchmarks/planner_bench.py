@@ -72,20 +72,35 @@ def run(emit):
         sec = _time(lambda: planner.plan_fleet(fc))
         emit(f"planner.two_tier.M{m}", sec * 1e6,
              f"{m / sec:.0f} streams/s")
+        # the shipped dispatch: the jitted device solver for fleets
+        # (core.shp_jax + kernels.plan_solve; f32 unconstrained / f64
+        # constrained — see the README float64 policy)
         args = _ntier_arrays(rng, m, 3)
         sec = _time(lambda: shp.plan_ntier_arrays(*args))
         emit(f"planner.three_tier.M{m}", sec * 1e6,
-             f"{m / sec:.0f} streams/s")
+             f"{m / sec:.0f} streams/s (jit device solver)")
         cap, lat, slo = _constraint_arrays(rng, m, 3, args[4], False)
         sec = _time(lambda: shp.plan_ntier_arrays(*args, cap=cap, lat=lat,
                                                   slo=slo), repeats=2)
         emit(f"planner.three_tier_capacity.M{m}", sec * 1e6,
-             f"{m / sec:.0f} streams/s")
+             f"{m / sec:.0f} streams/s (jit device solver)")
         cap, lat, slo = _constraint_arrays(rng, m, 3, args[4], True)
         sec = _time(lambda: shp.plan_ntier_arrays(*args, cap=cap, lat=lat,
                                                   slo=slo), repeats=2)
         emit(f"planner.three_tier_cap_slo.M{m}", sec * 1e6,
-             f"{m / sec:.0f} streams/s")
+             f"{m / sec:.0f} streams/s (jit device solver)")
+        if m == SIZES[-1]:
+            # the NumPy oracle at the largest M: the before/after
+            # reference the device rows are measured against
+            sec = _time(lambda: shp.plan_ntier_arrays(
+                *args, backend="numpy"), repeats=2)
+            emit(f"planner.three_tier_numpy_oracle.M{m}", sec * 1e6,
+                 f"{m / sec:.0f} streams/s (host reference)")
+            sec = _time(lambda: shp.plan_ntier_arrays(
+                *args, cap=cap, lat=lat, slo=slo, backend="numpy"),
+                repeats=2)
+            emit(f"planner.three_tier_cap_slo_numpy_oracle.M{m}",
+                 sec * 1e6, f"{m / sec:.0f} streams/s (host reference)")
     _run_online_resolve(emit, rng)
 
 
@@ -129,9 +144,9 @@ def _run_online_resolve(emit, rng):
         bounds = [tuple([0.29 * n[i]] * (t - 1)) for i in range(r)]
         mig = np.zeros(r, bool)
         sec = _time(lambda: rp.replan(np.arange(r), n0, rho, bounds, mig),
-                    repeats=3)
+                    repeats=6)
         emit(f"online.resolve_{t}tier.R{r}", sec * 1e6,
-             f"{r / sec:.0f} streams/s suffix re-solve")
+             f"{r / sec:.0f} streams/s suffix re-solve (jit device)")
 
 
 def main():

@@ -2,11 +2,28 @@
 # ``--json`` additionally writes one BENCH_<module>.json trajectory file per
 # module (deterministic: sorted keys, rows in emission order) under
 # ``--out-dir`` so bench artifacts don't land in the repo root.
+# ``--check`` compares the fresh rows against the committed repo-root
+# snapshots with a tolerance band and fails the run on planner-throughput
+# regressions, writing the full diff as a BENCH_diff.json artifact.
 import argparse
 import json
 import os
 import sys
 import traceback
+
+# the bench trajectory was previously unguarded: rows guarded here fail
+# the run when a fresh measurement is slower than the committed snapshot
+# by more than the tolerance band (same-machine comparison; CI runners
+# are noisy, hence the generous band and the restriction to the
+# largest-size rows — small-M rows jitter well past any sane band)
+GUARD_PREFIXES = ("planner.", "online.")
+GUARD_SUFFIXES = (".M64000", ".R256")
+CHECK_TOLERANCE = 0.30
+
+
+def _guarded(name: str) -> bool:
+    return (name.startswith(GUARD_PREFIXES)
+            and name.endswith(GUARD_SUFFIXES))
 
 
 def write_trajectory(name: str, rows: list, path: str | None = None,
@@ -22,6 +39,77 @@ def write_trajectory(name: str, rows: list, path: str | None = None,
     return path
 
 
+def check_regressions(fresh: dict, baseline_dir: str = ".",
+                      tol: float = CHECK_TOLERANCE,
+                      out_dir: str | None = None) -> list:
+    """Compare fresh rows ({module: rows}) against the committed
+    ``BENCH_<module>.json`` snapshots.
+
+    Rows are matched by name; a *guarded* row (``GUARD_PREFIXES``)
+    regresses when ``fresh_us > committed_us * (1 + tol)``. Unmatched or
+    unguarded rows are reported informationally only. Writes the full
+    comparison to ``BENCH_diff.json`` under ``out_dir`` (the CI
+    artifact) and returns the list of regression dicts."""
+    diff, regressions = [], []
+    for module, rows in fresh.items():
+        base_path = os.path.join(baseline_dir, f"BENCH_{module}.json")
+        committed = {}
+        if os.path.exists(base_path):
+            with open(base_path) as f:
+                committed = {r["name"]: r for r in json.load(f)["rows"]}
+        # cross-machine calibration: the committed snapshot was produced
+        # on some machine; the `_numpy_oracle` reference rows measure the
+        # same unchanged host code on both, so their ratio estimates the
+        # machine-speed delta and rescales the comparison
+        scales = [row["us_per_call"] / committed[row["name"]]["us_per_call"]
+                  for row in rows
+                  if "_numpy_oracle" in row["name"]
+                  and row["name"] in committed
+                  and committed[row["name"]]["us_per_call"]]
+        scale = sorted(scales)[len(scales) // 2] if scales else 1.0
+        for row in rows:
+            name = row["name"]
+            entry = {"name": name, "us_new": row["us_per_call"],
+                     "guarded": _guarded(name), "machine_scale": scale}
+            old = committed.get(name)
+            if old is None:
+                entry["status"] = "new"
+            else:
+                entry["us_committed"] = old["us_per_call"]
+                ratio = (row["us_per_call"]
+                         / (old["us_per_call"] * scale)
+                         if old["us_per_call"] else float("inf"))
+                entry["ratio"] = ratio
+                slow = ratio > 1.0 + tol
+                entry["status"] = ("regression" if slow and entry["guarded"]
+                                   else "slower" if slow else "ok")
+                if entry["status"] == "regression":
+                    regressions.append(entry)
+            diff.append(entry)
+        # a guarded committed row that no fresh row matches means the
+        # guard was silently defeated (renamed emit label, changed size
+        # constant, dropped row) — fail loudly instead of passing green
+        fresh_names = {row["name"] for row in rows}
+        for name, old in committed.items():
+            if _guarded(name) and name not in fresh_names:
+                entry = {"name": name, "us_committed": old["us_per_call"],
+                         "guarded": True, "status": "missing"}
+                regressions.append(entry)
+                diff.append(entry)
+    path = write_trajectory("diff", diff, out_dir=out_dir)
+    print(f"wrote {path} ({len(regressions)} guarded regression(s), "
+          f"tolerance {tol:.0%})")
+    for entry in regressions:
+        if entry["status"] == "missing":
+            print(f"  MISSING guarded row {entry['name']} "
+                  f"(committed {entry['us_committed']:.1f}us)")
+        else:
+            print(f"  REGRESSION {entry['name']}: "
+                  f"{entry['us_committed']:.1f}us -> "
+                  f"{entry['us_new']:.1f}us ({entry['ratio']:.2f}x)")
+    return regressions
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
@@ -32,6 +120,16 @@ def main() -> None:
     ap.add_argument("--out-dir", default="bench_out",
                     help="directory for BENCH_*.json artifacts "
                          "(default: bench_out)")
+    ap.add_argument("--check", action="store_true",
+                    help="compare fresh rows against the committed "
+                         "BENCH_*.json snapshots; exit 1 on guarded "
+                         "(planner/online) regressions beyond the band")
+    ap.add_argument("--check-tol", type=float, default=CHECK_TOLERANCE,
+                    help="relative slowdown tolerated by --check "
+                         "(default: 0.30)")
+    ap.add_argument("--baseline-dir", default=".",
+                    help="directory holding the committed snapshots "
+                         "(default: repo root)")
     args = ap.parse_args()
     from benchmarks import (algo_writes, fig8_trace, fig_curves,
                             kernels_bench, paper_tables, planner_bench,
@@ -47,6 +145,7 @@ def main() -> None:
         "planner": planner_bench,  # closed-form fleet planning throughput
     }
     failures = 0
+    fresh = {}
     print("name,us_per_call,derived")
     for name, mod in modules.items():
         if args.only and name != args.only:
@@ -64,9 +163,14 @@ def main() -> None:
             failures += 1
             emit(f"{name}.FAILED", 0.0, repr(e))
             traceback.print_exc(file=sys.stderr)
+        fresh[name] = rows
         if args.json:
             write_trajectory(name, rows, out_dir=args.out_dir)
-    if failures:
+    regressions = []
+    if args.check:
+        regressions = check_regressions(fresh, args.baseline_dir,
+                                        args.check_tol, args.out_dir)
+    if failures or regressions:
         raise SystemExit(1)
 
 

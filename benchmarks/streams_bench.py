@@ -49,12 +49,17 @@ def run(emit):
         state = engine.init(m, K)
         sc = jnp.asarray(rng.standard_normal((m, BATCH)), jnp.float32)
         ids = jnp.tile(jnp.arange(BATCH, dtype=jnp.int32), (m, 1))
-        us = _time(upd, state, sc, ids)
-        emit(f"streams.update_m{m}_k{K}_b{BATCH}", us,
-             f"{m * BATCH / us * 1e6:.0f} docs/s fused sort-merge")
+        # headline row first: the jnp filter+merge is what StreamEngine
+        # ships on wide batches (update_path="auto") — it beat the fused
+        # sort-merge at every M, so the engine now dispatches to it
         us = _time(filt, state, sc, ids)
         emit(f"streams.filtered_update_m{m}_k{K}_b{BATCH}", us,
-             f"{m * BATCH / us * 1e6:.0f} docs/s filter+merge (jnp ref)")
+             f"{m * BATCH / us * 1e6:.0f} docs/s filter+merge "
+             f"(engine default path)")
+        us = _time(upd, state, sc, ids)
+        emit(f"streams.update_m{m}_k{K}_b{BATCH}", us,
+             f"{m * BATCH / us * 1e6:.0f} docs/s vmap sort-merge "
+             f"(legacy fused path; narrow batches only)")
         if on_tpu:
             us = _time(pal, state, sc, ids)
             emit(f"streams.filtered_update_pallas_m{m}_k{K}_b{BATCH}", us,

@@ -14,6 +14,7 @@ arrays over M heterogeneous cost models).
 """
 from __future__ import annotations
 
+import functools
 import itertools
 import math
 from dataclasses import dataclass, field
@@ -772,20 +773,23 @@ def _solve_boundaries(cw_s, lin_s, n, k, interior=False, *, cap_s=None,
     return np.where(ok, interior_val, np.inf), bounds
 
 
+@functools.lru_cache(maxsize=None)
 def _tier_subsets(t: int):
     """Non-empty ordered tier subsets, singletons first then ascending by
     size — the first-minimum-wins precedence generalizing the candidate
-    order of ``plan_placement``."""
-    return [s for size in range(1, t + 1)
-            for s in itertools.combinations(range(t), size)]
+    order of ``plan_placement``. Cached: the enumeration is pure in ``t``
+    and was being recomputed on every ``plan_ntier_arrays`` call."""
+    return tuple(s for size in range(1, t + 1)
+                 for s in itertools.combinations(range(t), size))
 
 
+@functools.lru_cache(maxsize=None)
 def _cascade_subsets(t: int):
     """Tier subsets a migration cascade can traverse: at least two tiers,
     always ending in the (consumer-local) last tier — skipped middle tiers
-    save their eq. 19 hop."""
-    return [s + (t - 1,) for size in range(1, t)
-            for s in itertools.combinations(range(t - 1), size)]
+    save their eq. 19 hop. Cached like ``_tier_subsets``."""
+    return tuple(s + (t - 1,) for size in range(1, t)
+                 for s in itertools.combinations(range(t - 1), size))
 
 
 def _cascade_fee(cr, cw, used_cols):
@@ -797,12 +801,65 @@ def _cascade_fee(cr, cw, used_cols):
     return fee
 
 
+# Backend for the vectorized N-tier solve: "auto" routes fleets (M >=
+# _DEVICE_MIN_M, T <= 4) through the jitted device solver
+# (``core.shp_jax`` + the ``kernels.plan_solve`` reduction) and keeps
+# small/deep problems on the NumPy oracle below — which remains the
+# reference implementation the device path is property-tested against.
+_PLANNER_BACKEND = "auto"
+_DEVICE_MIN_M = 64
+
+
+def set_planner_backend(backend: str) -> str:
+    """Set the module-wide solve backend ("auto" | "jax" | "numpy");
+    returns the previous value. Tests pin "numpy" vs "jax" to compare."""
+    global _PLANNER_BACKEND
+    if backend not in ("auto", "jax", "numpy"):
+        raise ValueError(f"unknown planner backend {backend!r}")
+    prev, _PLANNER_BACKEND = _PLANNER_BACKEND, backend
+    return prev
+
+
 def plan_ntier_arrays(cw, cr, cs, n, k, rpw, *, cap=None, lat=None,
-                      slo=None, force_constrained=False):
+                      slo=None, force_constrained=False, backend=None):
     """Vectorized multi-threshold planner over M streams sharing one tier
-    count T. cw/cr/cs: (M, T); n/k/rpw: (M,). Returns a dict with
-    ``total`` (M,), ``bounds`` (M, T-1) full-topology boundary vectors,
-    and ``migrate`` (M,) bool.
+    count T — dispatches between the jitted device solver and the NumPy
+    oracle (same contract; see ``plan_ntier_arrays_numpy`` for the
+    model). ``backend`` overrides the module default ("auto")."""
+    cw = np.asarray(cw, np.float64)
+    m, t = cw.shape
+    if t > MAX_TIERS:
+        raise ValueError(f"topologies over {MAX_TIERS} tiers not supported")
+    b = backend if backend is not None else _PLANNER_BACKEND
+    if b == "auto":
+        # constrained 4-tier fleets stay on the oracle: their exact joint
+        # enumeration is G ~ C^3 tuples per subset, which the host bounds
+        # by _ENUM_CHUNK_CELLS but the gathered device path materializes
+        # per chunk — device routing there trades a Python loop for
+        # multi-GB transients
+        con = force_constrained or not constraints_mod.trivial(cap, slo)
+        t_max = _ENUM_MAX_STEPS + (0 if con else 1)
+        b = "jax" if 2 <= t <= t_max and m >= _DEVICE_MIN_M else "numpy"
+    if b == "jax":
+        try:
+            from . import shp_jax
+            return shp_jax.plan_ntier_arrays_jax(
+                cw, cr, cs, n, k, rpw, cap=cap, lat=lat, slo=slo,
+                force_constrained=force_constrained)
+        except shp_jax.DeviceSolverUnavailable:
+            if backend == "jax" or _PLANNER_BACKEND == "jax":
+                raise
+    return plan_ntier_arrays_numpy(cw, cr, cs, n, k, rpw, cap=cap, lat=lat,
+                                   slo=slo,
+                                   force_constrained=force_constrained)
+
+
+def plan_ntier_arrays_numpy(cw, cr, cs, n, k, rpw, *, cap=None, lat=None,
+                            slo=None, force_constrained=False):
+    """Host-side NumPy reference solver (the oracle the device path is
+    verified against). cw/cr/cs: (M, T); n/k/rpw: (M,). Returns a dict
+    with ``total`` (M,), ``bounds`` (M, T-1) full-topology boundary
+    vectors, and ``migrate`` (M,) bool.
 
     No-migration family: solved per tier subset (degenerate tiers collapse
     to zero width) with the most-expensive-*used*-tier rental bound.

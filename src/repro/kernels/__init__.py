@@ -7,6 +7,9 @@
 #                     fleet engine in repro.streams
 #   tier_assign    — finalize-time (M, T) tier assignment of survivor
 #                     payloads against per-stream boundary vectors
+#   plan_solve     — fused masked-objective + joint-argmin reduction for
+#                     the device-resident constrained planner (shp_jax)
 #   flash_attention — fused attention (removes the S² HBM score traffic
 #                     identified as the dominant train-cell roofline term)
-from . import batched_topk, entropy_scores, flash_attention, tier_assign, topk_filter  # noqa: F401
+from . import (batched_topk, entropy_scores, flash_attention, plan_solve,  # noqa: F401
+               tier_assign, topk_filter)

@@ -196,10 +196,11 @@ class Replanner:
     """
 
     def __init__(self, models: Sequence, constraints=None,
-                 config: Optional[ReplanConfig] = None):
+                 config: Optional[ReplanConfig] = None, backend=None):
         self.models = [None if cm is None else _as_ntier(cm)
                        for cm in models]
         self.config = config if config is not None else ReplanConfig()
+        self.backend = backend  # None/"auto" | "jax" | "numpy"
         m = len(self.models)
         if constraints is None or isinstance(constraints, ConstraintSet):
             self.csets = [constraints] * m
@@ -212,30 +213,80 @@ class Replanner:
                 raise NotImplementedError(
                     "fleet-shared capacities re-plan through the a-priori "
                     "water-filling pass, not the online re-planner")
+        # constraint resolution and the struct-of-arrays model view are
+        # pure in (model, cset): compile once at construction —
+        # re-resolving and re-stacking per replan() call dominated the
+        # whole suffix re-solve (~2/3 of the wall time)
+        self._compiled = [None if cm is None
+                          else shp.resolve_constraints(cm, cset)
+                          for cm, cset in zip(self.models, self.csets)]
+        self._row_pos: Dict[int, int] = {}
+        by_t: Dict[int, List[int]] = {}
+        for i, cm in enumerate(self.models):
+            if cm is not None:
+                by_t.setdefault(cm.t, []).append(i)
+        self._stacks: Dict[int, dict] = {}
+        for t, rows in by_t.items():
+            ms = [self.models[i] for i in rows]
+            self._stacks[t] = {
+                "cw": np.stack([cm.cw for cm in ms]),
+                "cr": np.stack([cm.cr for cm in ms]),
+                "cs": np.stack([cm.cs for cm in ms]),
+                "n": np.array([float(cm.workload.n_docs) for cm in ms]),
+                "k": np.array([float(cm.workload.k) for cm in ms]),
+                "rpw": np.array([cm.workload.reads_per_window
+                                 for cm in ms]),
+                "cap": np.stack([self._compiled[i][0] for i in rows]),
+                "lat": np.stack([self._compiled[i][1] for i in rows]),
+                "slo": np.array([self._compiled[i][2] for i in rows]),
+            }
+            for pos, i in enumerate(rows):
+                self._row_pos[i] = pos
+        self._t_of = np.array([0 if cm is None else cm.t
+                               for cm in self.models], np.int64)
+        self._ndocs_of = np.array(
+            [0.0 if cm is None else float(cm.workload.n_docs)
+             for cm in self.models])
 
     # ---- the suffix solve ------------------------------------------------
 
     def _solve_group(self, idxs, n_seen, rho, b0):
         """Re-solve one uniform-tier-count group. Returns (total (R,),
-        bounds (R, t-1), cost_old (R,))."""
+        bounds (R, t-1), cost_old (R,)).
+
+        Dispatches the per-subset suffix solve to the jitted device path
+        (``online.replan_device``, the ``kernels.plan_solve`` reduction)
+        for hierarchies the exact enumeration covers; the NumPy loop
+        below remains the oracle reference (``backend="numpy"``) the
+        device path is property-tested against."""
         cfg = self.config
-        models = [self.models[i] for i in idxs]
-        t = models[0].t
-        r = len(models)
-        cw = np.stack([cm.cw for cm in models])
-        cr = np.stack([cm.cr for cm in models])
-        cs = np.stack([cm.cs for cm in models])
-        n = np.array([float(cm.workload.n_docs) for cm in models])
-        k = np.array([float(cm.workload.k) for cm in models])
-        rpw = np.array([cm.workload.reads_per_window for cm in models])
-        compiled = [shp.resolve_constraints(cm, self.csets[i])
-                    for cm, i in zip(models, idxs)]
-        cap = np.stack([c[0] for c in compiled])
-        lat = np.stack([c[1] for c in compiled])
-        slo = np.array([c[2] for c in compiled])
+        t = self.models[idxs[0]].t
+        r = len(idxs)
+        st = self._stacks[t]
+        pos = np.asarray([self._row_pos[i] for i in idxs], np.int64)
+        cw, cr, cs = st["cw"][pos], st["cr"][pos], st["cs"][pos]
+        n, k, rpw = st["n"][pos], st["k"][pos], st["rpw"][pos]
+        cap, lat, slo = st["cap"][pos], st["lat"][pos], st["slo"][pos]
         constrained = not constraints_mod.trivial(cap, slo)
         n0 = np.asarray(n_seen, np.float64)
         rho = np.asarray(rho, np.float64)
+        backend = self.backend if self.backend is not None else "auto"
+        if backend != "numpy":
+            try:
+                from . import replan_device
+                if replan_device.available(t):
+                    total, bounds, cost_old = replan_device.solve_group(
+                        cw, cr, cs, n, k, rpw, cap, lat, slo, n0, rho,
+                        np.asarray(b0, np.float64),
+                        allow_moves=cfg.allow_moves)
+                    return total, bounds, cost_old, (cw, cr, n0, k, n,
+                                                     cap)
+                if backend == "jax":
+                    raise ValueError(
+                        f"device suffix re-solve unavailable for t={t}")
+            except ImportError:
+                if backend == "jax":
+                    raise
         s_n = n0 + rho * (n - n0)
         dens = np.minimum(n0, k) / np.maximum(n0, 1.0)
         start = np.maximum(n0, k)
@@ -323,25 +374,21 @@ class Replanner:
         rho = np.asarray(rho, np.float64)
         migrate = np.asarray(migrate, bool)
         r = rows.shape[0]
-        old = [tuple(float(b) for b in boundaries[i]) for i in range(r)]
+        old = [tuple(boundaries[i]) for i in range(r)]
         new = list(old)
         applied = np.zeros(r, bool)
-        considered = np.zeros(r, bool)
         feasible = np.ones(r, bool)
         cost_old = np.full(r, np.nan)
         cost_new = np.full(r, np.nan)
         bill = np.zeros(r)
         moves = np.zeros(r)
         suffix_occ: List = [None] * r
+        t_of = self._t_of[rows]
+        considered = ((t_of > 0) & ~migrate & (n_seen > 0)
+                      & (n_seen < self._ndocs_of[rows]))
         groups: Dict[int, List[int]] = {}
-        for j, row in enumerate(rows):
-            cm = self.models[row]
-            if cm is None or migrate[j]:
-                continue
-            if not 0 < n_seen[j] < cm.workload.n_docs:
-                continue
-            considered[j] = True
-            groups.setdefault(cm.t, []).append(j)
+        for j in np.flatnonzero(considered):
+            groups.setdefault(int(t_of[j]), []).append(int(j))
         for t, idxs in sorted(groups.items()):
             b0 = np.array([old[j] for j in idxs], np.float64)
             total, bounds, c_old, (cw, cr, n0, k, n, cap) = \
@@ -361,17 +408,20 @@ class Replanner:
             margin = self.config.min_rel_saving * np.maximum(
                 np.abs(c_old), 1e-12)
             apply_g = feas & (total < c_old - margin)
-            for jj, j in enumerate(idxs):
-                feasible[j] = bool(feas[jj])
-                cost_old[j] = c_old[jj]
-                cost_new[j] = total[jj]
-                if occ is not None:
+            ii = np.asarray(idxs, np.int64)
+            feasible[ii] = feas
+            cost_old[ii] = c_old
+            cost_new[ii] = total
+            ap = np.flatnonzero(apply_g)
+            applied[ii[ap]] = True
+            bill[ii[ap]] = g_bill[ap]
+            moves[ii[ap]] = g_moves[ap]
+            if occ is not None:
+                for jj, j in enumerate(idxs):
                     suffix_occ[j] = occ[jj]
-                if apply_g[jj]:
-                    applied[j] = True
-                    new[j] = tuple(float(b) for b in bounds[jj])
-                    bill[j] = g_bill[jj]
-                    moves[j] = g_moves[jj]
+            blist = bounds.tolist()
+            for jj in ap:
+                new[idxs[jj]] = tuple(blist[jj])
         return ReplanDecision(rows=rows, n_seen=n_seen, rho=rho,
                               old_bounds=old, new_bounds=new,
                               applied=applied, considered=considered,

@@ -139,21 +139,34 @@ def evicted_ids(old: BatchedReservoirState,
 
 
 def _make_step(use_kernel_filter: bool, block_n: int, drift_cfg=None,
-               bucket_ks: Tuple[int, ...] = ()):
+               bucket_ks: Tuple[int, ...] = (), update_path: str = "auto"):
     """One jitted step over ALL buckets: states/batches are same-length
     tuples (the pytree structure is static, so the whole fleet advances in
     a single XLA computation). With ``drift_cfg`` (online re-planning) the
     step also advances each bucket's drift-detector state from the chunk's
     write counts — the sequential statistics stay (M,)-batched on device.
+
+    ``update_path`` picks the wide-batch (W >= K) update: "auto" (the
+    default) dispatches to ``filtered_update`` — the jnp filter+merge
+    beats the fused vmap sort-merge at every fleet size in
+    BENCH_streams.json (the sort works on K+W columns; the filter tops
+    K survivors out of W then merges K+K) — while "fused" keeps the
+    legacy all-sort path. ``use_kernel_filter`` upgrades the filtered
+    path's candidate scan to the Pallas kernel. Narrow batches (W < K)
+    always take the fused sort-merge, whose one sort is then cheaper.
     """
     if drift_cfg is not None:
         from repro.online import drift as drift_mod
+    if update_path not in ("auto", "fused"):
+        raise ValueError(f"unknown update_path {update_path!r}")
 
     def step(states, batches, dstates):
         new_states, wrotes, evs, new_dstates = [], [], [], []
         for bi, (st, (s, i)) in enumerate(zip(states, batches)):
-            if use_kernel_filter and s.shape[1] >= st.scores.shape[1]:
-                new, wrote = filtered_update(st, s, i, block_n=block_n)
+            wide = s.shape[1] >= st.scores.shape[1]
+            if wide and (update_path == "auto" or use_kernel_filter):
+                new, wrote = filtered_update(st, s, i, block_n=block_n,
+                                             use_pallas=use_kernel_filter)
             else:
                 new, wrote = update(st, s, i)
             new_states.append(new)
@@ -242,7 +255,7 @@ class StreamEngine:
 
     def __init__(self, specs: Sequence[StreamSpec], *,
                  use_kernel_filter: bool = False, block_n: int = 512,
-                 constraints=None, replan=None):
+                 constraints=None, replan=None, update_path: str = "auto"):
         if not specs:
             raise ValueError("need at least one stream")
         by_id = {s.stream_id: s for s in specs}
@@ -325,7 +338,8 @@ class StreamEngine:
         self._step = _make_step(
             use_kernel_filter, block_n,
             drift_cfg=None if replan is None else replan.drift,
-            bucket_ks=tuple(b.k for b in self.buckets))
+            bucket_ks=tuple(b.k for b in self.buckets),
+            update_path=update_path)
 
     @property
     def m(self) -> int:

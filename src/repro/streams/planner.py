@@ -206,10 +206,14 @@ def _plan_fleet_constrained(fc: FleetCosts, cset: ConstraintSet,
     cw = np.stack([fc.cw_a, fc.cw_b], axis=1)
     cr = np.stack([fc.cr_a, fc.cr_b], axis=1)
     cs = np.stack([fc.cs_a, fc.cs_b], axis=1)
+    # (M, 2) constraint views are broadcast, not materialized: the solver
+    # consumes them read-only, so one (2,)/scalar allocation serves the
+    # whole fleet instead of three fresh M-row arrays per call
     cap = np.broadcast_to(cset.capacity_array(2, 0.0), (m, 2))
-    lat_arr = (np.zeros((m, 2)) if lat is None
-               else np.broadcast_to(np.asarray(lat, np.float64), (m, 2)))
-    slo = np.full(m, cset.max_read_latency)
+    lat_arr = np.broadcast_to(
+        np.zeros(2) if lat is None else np.asarray(lat, np.float64),
+        (m, 2))
+    slo = np.broadcast_to(np.float64(cset.max_read_latency), (m,))
     out = shp.plan_ntier_arrays(cw, cr, cs, fc.n, fc.k, fc.reads_per_window,
                                 cap=cap, lat=lat_arr, slo=slo)
     feasible = np.isfinite(out["total"])

@@ -1,0 +1,359 @@
+"""Device-resident constrained planner (core/shp_jax.py +
+kernels/plan_solve) and device suffix re-solve (online/replan_device.py):
+oracle agreement on random constrained 2/3/4-tier models (including
+infeasible streams returning +inf), brute-force never-lose checks,
+Pallas-kernel-vs-jnp-reference equality, the documented float64/x64
+policy (the solver scopes its own x64 — ambient ``jax_enable_x64`` off
+is the CI default — and float32 is the TPU mode with documented
+degradation), and the online re-planner's device-vs-NumPy decisions."""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import constraints as constraints_mod
+from repro.core import costs, shp, shp_jax, topology
+from repro.core.constraints import ConstraintSet, ReadLatencySLO, TierCapacity
+
+# The f64 device path mirrors the NumPy oracle's arithmetic op for op;
+# residual divergence is transcendental (log) codegen and XLA fma
+# contraction, amplified only under cancellation in the separable-term
+# sums. This is the documented bit-match band (see README).
+F64_RTOL = 1e-11
+
+
+def _rand_batch(rng, m, t):
+    n = rng.integers(2_000, 1_000_000, m).astype(np.float64)
+    k = np.maximum(1, (n * rng.uniform(0.001, 0.1, m))).astype(np.float64)
+    r = lambda s: 10.0 ** rng.uniform(-8, -3, s)
+    return r((m, t)), r((m, t)), r((m, t)), n, k, np.ones(m)
+
+
+def _rand_constraints(rng, m, t, k, lat_levels=True):
+    cap = np.full((m, t), np.inf)
+    cap[:, 0] = np.where(rng.random(m) < 0.8,
+                         k * rng.uniform(0.05, 2.0, m), np.inf)
+    if t > 2:
+        cap[:, 1] = np.where(rng.random(m) < 0.5,
+                             k * rng.uniform(0.2, 1.5, m), np.inf)
+    cap[:, -1] = np.where(rng.random(m) < 0.2,
+                          k * rng.uniform(0.05, 0.5, m), np.inf)
+    lat = 10.0 ** rng.uniform(-3, 2, (m, t))
+    lat.sort(axis=1)
+    slo = np.where(rng.random(m) < 0.6,
+                   10.0 ** rng.uniform(
+                       np.log10(np.maximum(lat[:, 0], 1e-6)),
+                       np.log10(lat[:, -1] + 1e-6)),
+                   np.inf)
+    return cap, lat, slo
+
+
+def _eval_plan(args, bounds, mig):
+    """The f64 plan objective at given (bounds, migrate) — the planner's
+    conventions (most-expensive-used-tier rental / cascade fees)."""
+    cw, cr, cs, n, k, rpw = args
+    m, t = cw.shape
+    edges = np.concatenate([np.zeros((m, 1)), bounds, n[:, None]], 1)
+    w = shp._w_approx(edges, k[:, None])
+    wseg = np.diff(w, axis=1)
+    frac = np.diff(edges, axis=1) / n[:, None]
+    writes = (wseg * cw).sum(1)
+    reads = rpw * k * (frac * cr).sum(1)
+    used = frac > 0
+    tot_nm = writes + reads + k * np.max(np.where(used, cs, -np.inf), 1)
+    stor_mg = k * (frac * cs).sum(1)
+    fee = np.zeros(m)
+    prev = np.zeros(m, np.int64)
+    usedm = np.concatenate([frac[:, :-1] > 0, np.ones((m, 1), bool)], 1)
+    seen = np.logical_or.accumulate(usedm, 1)[:, :-1]
+    crossing = usedm[:, 1:] & seen
+    rows = np.arange(m)
+    for ti in range(1, t):
+        hop = crossing[:, ti - 1]
+        fee = fee + np.where(hop, cr[rows, prev] + cw[:, ti], 0.0)
+        prev = np.where(usedm[:, ti], ti, prev)
+    return np.where(mig, writes + stor_mg + k * fee, tot_nm)
+
+
+# ---------------------------------------------------------------------------
+# Oracle agreement (float64, the verification mode)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("t,seed", [(2, 0), (3, 1), (4, 2)])
+def test_device_f64_matches_numpy_oracle_unconstrained(t, seed):
+    rng = np.random.default_rng(seed)
+    args = _rand_batch(rng, 400, t)
+    a = shp.plan_ntier_arrays(*args, backend="numpy")
+    b = shp_jax.plan_ntier_arrays_jax(*args, precision="float64")
+    np.testing.assert_allclose(b["total"], a["total"], rtol=F64_RTOL)
+    assert (a["migrate"] == b["migrate"]).all()
+    # the device plan, re-evaluated under the oracle objective, is
+    # exactly as cheap (bounds may differ only on equal-cost ties)
+    re_ev = _eval_plan(args, b["bounds"], b["migrate"])
+    np.testing.assert_allclose(re_ev, a["total"], rtol=F64_RTOL)
+
+
+@pytest.mark.parametrize("t,seed", [(2, 10), (3, 11), (4, 12)])
+def test_device_f64_matches_numpy_oracle_constrained(t, seed):
+    rng = np.random.default_rng(seed)
+    args = _rand_batch(rng, 400, t)
+    cap, lat, slo = _rand_constraints(rng, 400, t, args[4])
+    a = shp.plan_ntier_arrays(*args, cap=cap, lat=lat, slo=slo,
+                              backend="numpy")
+    b = shp_jax.plan_ntier_arrays_jax(*args, cap=cap, lat=lat, slo=slo,
+                                      precision="float64")
+    feas = np.isfinite(a["total"])
+    # infeasible streams return +inf on both backends, bounds zeroed
+    assert (feas == np.isfinite(b["total"])).all()
+    assert feas.sum() > 50 and (~feas).sum() > 5  # both regimes exercised
+    assert (b["bounds"][~feas] == 0.0).all()
+    np.testing.assert_allclose(b["total"][feas], a["total"][feas],
+                               rtol=F64_RTOL)
+    assert (a["migrate"] == b["migrate"]).all()
+
+
+def test_device_backend_dispatch_and_override():
+    rng = np.random.default_rng(3)
+    args = _rand_batch(rng, 128, 3)
+    auto = shp.plan_ntier_arrays(*args)  # M >= 64, t <= 4 -> device
+    dev = shp.plan_ntier_arrays(*args, backend="jax")
+    np.testing.assert_array_equal(auto["total"], dev["total"])
+    prev = shp.set_planner_backend("numpy")
+    try:
+        host = shp.plan_ntier_arrays(*args)
+    finally:
+        shp.set_planner_backend(prev)
+    # the unconstrained device default is float32: reported totals carry
+    # f32 accuracy, the plans themselves are oracle-optimal (re-checked
+    # under the f64 objective)
+    np.testing.assert_allclose(dev["total"], host["total"], rtol=5e-3)
+    re_ev = _eval_plan(args, dev["bounds"], dev["migrate"])
+    np.testing.assert_allclose(re_ev, host["total"], rtol=1e-5)
+    # deep hierarchies fall back to the NumPy oracle under "auto"...
+    args5 = _rand_batch(rng, 64, 5)
+    out5 = shp.plan_ntier_arrays(*args5)
+    assert np.isfinite(out5["total"]).all()
+    # ...and raise when the device backend is forced
+    with pytest.raises(shp_jax.DeviceSolverUnavailable):
+        shp.plan_ntier_arrays(*args5, backend="jax")
+
+
+def test_device_never_loses_to_brute_force_feasible_grid():
+    """The device plan (f64) on single constrained models must match the
+    same never-lose bar the NumPy solver holds against the brute-force
+    feasible grid."""
+    rng = np.random.default_rng(21)
+    checked = 0
+    for trial in range(40):
+        t = int(rng.integers(3, 5))
+        n = int(rng.integers(2_000, 200_000))
+        k = int(rng.integers(1, max(2, n // 10)))
+        specs = tuple(
+            topology.TierSpec(
+                costs.TierCosts(f"t{i}", *(10.0 ** rng.uniform(-8, -3, 3))),
+                read_latency_s=float(10.0 ** rng.uniform(-3, 2)))
+            for i in range(t))
+        wl = costs.WorkloadSpec(n_docs=n, k=k, doc_gb=1e-3,
+                                window_months=1.0)
+        cm = topology.TierTopology(tiers=specs).cost_model(wl)
+        cons = [TierCapacity(int(rng.integers(0, t)),
+                             float(k * rng.uniform(0.1, 2.0)))]
+        if rng.uniform() < 0.4:
+            cons.append(ReadLatencySLO(float(np.median(cm.read_latency))))
+        cset = ConstraintSet(*cons)
+        cap, lat, slo, _ = shp.resolve_constraints(cm, cset)
+        out = shp_jax.plan_ntier_arrays_jax(
+            cm.cw[None], cm.cr[None], cm.cs[None],
+            np.array([float(n)]), np.array([float(k)]),
+            np.array([wl.reads_per_window]), cap=cap[None], lat=lat[None],
+            slo=np.array([slo]), precision="float64")
+        bt, bb, bm = shp.brute_force_plan_ntier(cm, grid=32,
+                                                constraints=cset)
+        if not np.isfinite(out["total"][0]):
+            assert not np.isfinite(bt)
+            continue
+        checked += 1
+        assert out["total"][0] <= bt * (1 + 1e-9) + 1e-12, \
+            (trial, out["total"][0], bt)
+        assert cset.feasible(cm, tuple(out["bounds"][0]),
+                             bool(out["migrate"][0]))
+    assert checked >= 25
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel vs jnp reference
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("constrained", [False, True])
+def test_pallas_kernel_matches_jnp_reference(constrained):
+    """The Pallas reduction (interpret mode off-TPU) and the jnp
+    reference must pick identical plans — same grids, same masks, same
+    first-minimum precedence."""
+    rng = np.random.default_rng(7)
+    m = 48
+    args = _rand_batch(rng, m, 3)
+    kw = {}
+    if constrained:
+        cap, lat, slo = _rand_constraints(rng, m, 3, args[4])
+        kw = dict(cap=cap, lat=lat, slo=slo)
+    ref = shp_jax.plan_ntier_arrays_jax(*args, precision="float64",
+                                        use_pallas=False, **kw)
+    pal = shp_jax.plan_ntier_arrays_jax(*args, precision="float64",
+                                        use_pallas=True, **kw)
+    feas = np.isfinite(ref["total"])
+    assert (feas == np.isfinite(pal["total"])).all()
+    np.testing.assert_allclose(pal["total"][feas], ref["total"][feas],
+                               rtol=1e-9)
+    assert (ref["migrate"] == pal["migrate"]).all()
+
+
+# ---------------------------------------------------------------------------
+# The float64/x64 policy (the satellite's x64-disabled documentation)
+# ---------------------------------------------------------------------------
+
+def test_x64_disabled_ambient_config_is_irrelevant():
+    """CI (and this suite) runs with ``jax_enable_x64`` off — the
+    solver's f64 mode scopes its own x64 context, so the ambient flag
+    must not matter. This is the documented policy: float64 results do
+    not depend on global configuration."""
+    assert not jax.config.jax_enable_x64  # the repo never enables it
+    rng = np.random.default_rng(5)
+    args = _rand_batch(rng, 200, 3)
+    a = shp.plan_ntier_arrays(*args, backend="numpy")
+    b = shp_jax.plan_ntier_arrays_jax(*args, precision="float64")
+    np.testing.assert_allclose(b["total"], a["total"], rtol=F64_RTOL)
+    assert b["total"].dtype == np.float64
+
+
+def test_float32_mode_documented_degradation():
+    """precision="float32" (the TPU / x64-less mode, and the shipped
+    default for *unconstrained* fleet solves): plans stay essentially
+    optimal — re-evaluated under the f64 oracle objective they sit
+    within 1e-5 of the oracle optimum — while the *reported* totals
+    only carry float32 accuracy (~1e-4 relative). Constrained solves
+    default to float64 precisely because float32's cancellation near
+    binding constraints loses that guarantee (documented in shp_jax)."""
+    rng = np.random.default_rng(6)
+    args = _rand_batch(rng, 300, 3)
+    a = shp.plan_ntier_arrays(*args, backend="numpy")
+    b32 = shp_jax.plan_ntier_arrays_jax(*args, precision="float32")
+    re_ev = _eval_plan(args, b32["bounds"], b32["migrate"])
+    subopt = (re_ev - a["total"]) / np.abs(a["total"])
+    assert subopt.max() < 1e-5
+    np.testing.assert_allclose(b32["total"], a["total"], rtol=5e-3)
+    # the default precision split: f32 unconstrained, f64 constrained
+    assert shp_jax.DEFAULT_PRECISION_UNCONSTRAINED == "float32"
+    assert shp_jax.DEFAULT_PRECISION_CONSTRAINED == "float64"
+    cap, lat, slo = _rand_constraints(rng, 300, 3, args[4])
+    con = shp.plan_ntier_arrays(*args, cap=cap, lat=lat, slo=slo,
+                                backend="jax")
+    host = shp.plan_ntier_arrays(*args, cap=cap, lat=lat, slo=slo,
+                                 backend="numpy")
+    feas = np.isfinite(host["total"])
+    np.testing.assert_allclose(con["total"][feas], host["total"][feas],
+                               rtol=F64_RTOL)  # => the default ran f64
+
+
+def test_forced_constrained_trivial_matches_unconstrained_device():
+    """force_constrained with all-trivial constraints must reproduce the
+    unconstrained device solve (the host's bit-identity property)."""
+    rng = np.random.default_rng(8)
+    args = _rand_batch(rng, 100, 3)
+    a = shp_jax.plan_ntier_arrays_jax(*args, precision="float64")
+    b = shp_jax.plan_ntier_arrays_jax(*args, precision="float64",
+                                      force_constrained=True)
+    np.testing.assert_allclose(a["total"], b["total"], rtol=1e-12)
+    assert (a["migrate"] == b["migrate"]).all()
+
+
+# ---------------------------------------------------------------------------
+# Online re-planner: device suffix solve vs NumPy oracle
+# ---------------------------------------------------------------------------
+
+def _online_models(rng, r, t, with_caps=False):
+    from repro.online.replan import Replanner
+    models, csets = [], []
+    for _ in range(r):
+        wl = costs.WorkloadSpec(n_docs=int(rng.integers(5_000, 50_000)),
+                                k=int(rng.integers(8, 128)), doc_gb=1e-4,
+                                window_months=0.5)
+        tiers = []
+        put, get, rent = 1e-6, 3e-4, 0.05
+        for _ in range(t):
+            tiers.append(topology.TierSpec(
+                costs.TierCosts("t", put_per_doc=put * rng.uniform(0.8, 1.2),
+                                get_per_doc=get * rng.uniform(0.8, 1.2),
+                                storage_per_gb_month=rent),
+                read_latency_s=float(10.0 ** rng.uniform(-3, 1))))
+            put *= 40.0
+            get /= 40.0
+            rent /= 3.0
+        models.append(topology.TierTopology(tiers=tuple(tiers))
+                      .cost_model(wl))
+        cons = []
+        if with_caps and rng.uniform() < 0.8:
+            cons.append(TierCapacity(0, float(wl.k * rng.uniform(0.3, 2.0))))
+        csets.append(ConstraintSet(*cons))
+    return models, csets
+
+
+@pytest.mark.parametrize("t,with_caps", [(2, False), (3, False), (3, True)])
+def test_replan_device_matches_numpy(t, with_caps):
+    from repro.online.replan import Replanner
+    rng = np.random.default_rng(31 + t)
+    r = 48
+    models, csets = _online_models(rng, r, t, with_caps)
+    kw = dict(constraints=csets) if with_caps else {}
+    rp_dev = Replanner(models, **kw)
+    rp_np = Replanner(models, backend="numpy", **kw)
+    n = np.array([m.workload.n_docs for m in models], np.float64)
+    n0 = rng.uniform(0.1, 0.9, r) * n
+    rho = rng.uniform(0.3, 8.0, r)
+    bounds = [tuple(sorted(rng.uniform(0, n[i], t - 1))) for i in range(r)]
+    mig = rng.random(r) < 0.15
+    d_np = rp_np.replan(np.arange(r), n0, rho, bounds, mig)
+    d_dev = rp_dev.replan(np.arange(r), n0, rho, bounds, mig)
+    assert (np.asarray(d_np.considered) == np.asarray(d_dev.considered)).all()
+    assert (d_np.applied == d_dev.applied).all()
+    assert (d_np.feasible == d_dev.feasible).all()
+    cn = np.asarray(d_np.suffix_cost_new)
+    cd = np.asarray(d_dev.suffix_cost_new)
+    both = np.isfinite(cn) & np.isfinite(cd)
+    assert (np.isfinite(cn) == np.isfinite(cd)).all()
+    np.testing.assert_allclose(cd[both], cn[both], rtol=1e-10)
+    np.testing.assert_allclose(np.asarray(d_dev.suffix_cost_old),
+                               np.asarray(d_np.suffix_cost_old),
+                               rtol=1e-10, equal_nan=True)
+    for a, b in zip(d_np.new_bounds, d_dev.new_bounds):
+        np.testing.assert_allclose(np.asarray(b, float),
+                                   np.asarray(a, float),
+                                   rtol=1e-6, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis property (skipped without the optional dependency)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as hyp_st
+
+    @settings(deadline=None, max_examples=25)
+    @given(seed=hyp_st.integers(0, 2 ** 31 - 1),
+           t=hyp_st.integers(2, 4),
+           constrained=hyp_st.booleans())
+    def test_device_matches_oracle_property(seed, t, constrained):
+        rng = np.random.default_rng(seed)
+        args = _rand_batch(rng, 64, t)
+        kw = {}
+        if constrained:
+            cap, lat, slo = _rand_constraints(rng, 64, t, args[4])
+            kw = dict(cap=cap, lat=lat, slo=slo)
+        a = shp.plan_ntier_arrays(*args, backend="numpy", **kw)
+        b = shp_jax.plan_ntier_arrays_jax(*args, precision="float64", **kw)
+        feas = np.isfinite(a["total"])
+        assert (feas == np.isfinite(b["total"])).all()
+        np.testing.assert_allclose(b["total"][feas], a["total"][feas],
+                                   rtol=F64_RTOL)
+        assert (a["migrate"] == b["migrate"]).all()
+except ImportError:  # pragma: no cover - optional dependency
+    pass

@@ -15,6 +15,7 @@ import time
 import numpy as np
 
 from repro.core import shp
+from repro.obs import timers
 from repro.streams import planner
 
 SIZES = (1_000, 16_000, 64_000)
@@ -56,13 +57,7 @@ def _constraint_arrays(rng, m, t, k, with_slo):
     return cap, lat, slo
 
 
-def _time(fn, repeats=3) -> float:
-    best = float("inf")
-    for _ in range(repeats):
-        t0 = time.perf_counter()
-        fn()
-        best = min(best, time.perf_counter() - t0)
-    return best
+_time = timers.time_best  # the shared best-of-N host-call discipline
 
 
 def run(emit):
@@ -163,7 +158,8 @@ def main():
 
     def emit(name, us, derived=""):
         print(f"{name},{us:.1f},{derived}")
-        rows.append({"name": name, "us_per_call": us, "derived": derived})
+        rows.append({"name": name, "us_per_call": us, "derived": derived,
+                     "ts": time.time()})
 
     run(emit)
     if args.json:

@@ -8,7 +8,9 @@
 import argparse
 import json
 import os
+import platform
 import sys
+import time
 import traceback
 
 # the bench trajectory was previously unguarded: rows guarded here fail
@@ -26,16 +28,36 @@ def _guarded(name: str) -> bool:
             and name.endswith(GUARD_SUFFIXES))
 
 
+def host_meta() -> dict:
+    """The measurement context stamped into every trajectory file: which
+    machine and numeric regime produced the numbers (cross-machine
+    comparisons lean on ``_numpy_oracle`` calibration, but the metadata
+    makes the provenance inspectable)."""
+    meta = {"platform": platform.platform(),
+            "cpu_count": os.cpu_count(),
+            "python": platform.python_version()}
+    try:
+        import jax
+        meta["jax_version"] = jax.__version__
+        meta["jax_backend"] = jax.default_backend()
+        meta["jax_x64"] = bool(jax.config.jax_enable_x64)
+    except Exception:  # pragma: no cover - jax is a hard dep in practice
+        meta["jax_version"] = None
+    return meta
+
+
 def write_trajectory(name: str, rows: list, path: str | None = None,
                      out_dir: str | None = None) -> str:
     """Write one BENCH_<name>.json trajectory file (the uniform format all
-    bench entry points share)."""
+    bench entry points share): sorted keys, rows in emission order, plus
+    the host-metadata block."""
     if path is None:
         d = out_dir or "."
         os.makedirs(d, exist_ok=True)
         path = os.path.join(d, f"BENCH_{name}.json")
     with open(path, "w") as f:
-        json.dump({"bench": name, "rows": rows}, f, indent=1, sort_keys=True)
+        json.dump({"bench": name, "host": host_meta(), "rows": rows},
+                  f, indent=1, sort_keys=True)
     return path
 
 
@@ -155,7 +177,7 @@ def main() -> None:
         def emit(row_name: str, us_per_call: float, derived: str = "") -> None:
             print(f"{row_name},{us_per_call:.1f},{derived}")
             rows.append({"name": row_name, "us_per_call": us_per_call,
-                         "derived": derived})
+                         "derived": derived, "ts": time.time()})
 
         try:
             mod.run(emit)

@@ -29,7 +29,8 @@ from repro.data.curation import TopKCurator
 from repro.models import lm
 
 
-def make_tenant_engine(tenants: int, requests: int, topk: int, doc_gb: float):
+def make_tenant_engine(tenants: int, requests: int, topk: int, doc_gb: float,
+                       obs=None):
     """Heterogeneous per-tenant retention: K alternates, cost models jitter
     the HBM presets, every third tenant gets a 3-tier HBM → DRAM → disk
     topology, and the fleet planner picks each tenant's boundary vector."""
@@ -52,7 +53,7 @@ def make_tenant_engine(tenants: int, requests: int, topk: int, doc_gb: float):
             cm = costs.hbm_host_preset(n_docs=n_per, k=k, doc_gb=doc_gb,
                                        window_seconds=window)
         specs.append(StreamSpec(stream_id=t, k=k, cost_model=cm))
-    return StreamEngine(specs), specs
+    return StreamEngine(specs, obs=obs), specs
 
 
 def main():
@@ -70,7 +71,16 @@ def main():
                          "and tier depth — every third tenant plans a "
                          "3-tier HBM->DRAM->disk hierarchy); requires "
                          "--requests >= 2*tenants")
+    ap.add_argument("--obs-out", default=None, metavar="DIR",
+                    help="enable the repro.obs telemetry layer and write "
+                         "metrics.json / metrics.prom (Prometheus text "
+                         "exposition) / events.jsonl artifacts to DIR")
     args = ap.parse_args()
+
+    obs = None
+    if args.obs_out is not None:
+        from repro.obs import Observability, ObsConfig
+        obs = Observability(ObsConfig())
 
     cfg = configs.get_config(args.arch, reduced=True)
     params = lm.init_params(cfg, jax.random.PRNGKey(0))
@@ -80,7 +90,7 @@ def main():
     curator = engine = None
     if args.tenants > 1:
         engine, tenant_specs = make_tenant_engine(
-            args.tenants, args.requests, args.topk, doc_gb)
+            args.tenants, args.requests, args.topk, doc_gb, obs=obs)
         print(f"multi-tenant retention: {args.tenants} streams, "
               f"fleet plan {engine.plan.strategy_histogram()}")
     else:
@@ -151,6 +161,15 @@ def main():
         retained = curator.finalize()
         print(f"top-{args.topk} most-uncertain requests retained for review: "
               f"{sorted(retained)}")
+    if obs is not None:
+        paths = obs.write(args.obs_out)
+        snap = obs.snapshot()
+        jit = snap.get("jit", {})
+        print("obs: " + ", ".join(
+            f"{name} calls={p['calls']} misses={p['misses']}"
+            for name, p in sorted(jit.items())) if jit else
+            "obs: no jit probes fired")
+        print("obs artifacts: " + ", ".join(sorted(paths.values())))
 
 
 if __name__ == "__main__":

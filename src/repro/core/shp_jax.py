@@ -684,11 +684,18 @@ def plan_ntier_arrays_jax(cw, cr, cs, n, k, rpw, *, cap=None, lat=None,
                 for p in part]
         return part
 
+    # jit-cache probe (repro.obs.jits): one compiled signature per
+    # (T, constraint-signature, padded-M) key — the probe makes compile
+    # storms (a signature varying call-to-call) visible as miss counts
+    from repro.obs import jits as obs_jits
+    _probe = obs_jits.probe("shp_jax.plan")
+    _key = (t, constrained, capfin, slo_any, use_pallas, chunk, precision)
+
     def _solve(lo_i):
         with enable_x64(precision == "float64"):
-            out = _plan_jit(*_chunk_args(lo_i), t=t,
-                            constrained=constrained, capfin=capfin,
-                            slo_any=slo_any, use_pallas=use_pallas)
+            out = _probe.track(_plan_jit, *_chunk_args(lo_i), key=_key,
+                               t=t, constrained=constrained, capfin=capfin,
+                               slo_any=slo_any, use_pallas=use_pallas)
             return [np.asarray(o) for o in out]
 
     starts = list(range(0, m, chunk))

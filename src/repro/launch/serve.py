@@ -22,6 +22,10 @@ def main():
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--tenants", type=int, default=1,
                     help=">1 = multi-tenant retention via repro.streams")
+    ap.add_argument("--obs-out", default=None, metavar="DIR",
+                    help="enable repro.obs telemetry and write the "
+                         "metrics.json / metrics.prom / events.jsonl "
+                         "artifacts to DIR")
     args, extra = ap.parse_known_args()
     import repro  # noqa: F401 — ensure PYTHONPATH is sane before spawning
     import os
@@ -30,8 +34,10 @@ def main():
     script = os.path.join(here, "examples", "serve_topk.py")
     cmd = [sys.executable, script, "--arch", args.arch,
            "--requests", str(args.requests), "--batch", str(args.batch),
-           "--tenants", str(args.tenants)] + extra
-    raise SystemExit(subprocess.call(cmd))
+           "--tenants", str(args.tenants)]
+    if args.obs_out is not None:
+        cmd += ["--obs-out", args.obs_out]
+    raise SystemExit(subprocess.call(cmd + extra))
 
 
 if __name__ == "__main__":

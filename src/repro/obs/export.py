@@ -1,0 +1,69 @@
+"""Metric exposition: Prometheus-style text format and JSON snapshots.
+
+``to_prometheus`` flattens a nested snapshot dict (the output of
+``Observability.snapshot``) into the text exposition format: numeric
+leaves become ``<prefix>_<path> value`` samples, lists of numbers become
+one sample per element with an ``idx`` label (per-tier gauges), and
+non-numeric leaves are dropped. Names are sanitized to the metric
+charset. The output is deterministic (sorted) so snapshots diff cleanly
+in CI artifacts.
+"""
+from __future__ import annotations
+
+import json
+import re
+from typing import Iterable, List, Tuple
+
+_NAME_RE = re.compile(r"[^a-zA-Z0-9_]")
+
+
+def _clean(name: str) -> str:
+    n = _NAME_RE.sub("_", name)
+    return n if not n[:1].isdigit() else "_" + n
+
+
+def _flatten(snap, path: Tuple[str, ...] = ()) -> Iterable[Tuple]:
+    if isinstance(snap, dict):
+        for k in sorted(snap):
+            yield from _flatten(snap[k], path + (str(k),))
+    elif isinstance(snap, bool):
+        yield path, None, float(snap)
+    elif isinstance(snap, (int, float)):
+        yield path, None, float(snap)
+    elif isinstance(snap, (list, tuple)):
+        for i, v in enumerate(snap):
+            if isinstance(v, (int, float)) and not isinstance(v, bool):
+                yield path, i, float(v)
+
+
+def to_prometheus(snap: dict, prefix: str = "repro_obs") -> str:
+    """Render a snapshot dict as Prometheus text exposition."""
+    lines: List[str] = []
+    seen_names = set()
+    for path, idx, val in _flatten(snap):
+        name = _clean("_".join((prefix,) + path))
+        if name not in seen_names:
+            seen_names.add(name)
+            lines.append(f"# TYPE {name} gauge")
+        label = f'{{idx="{idx}"}}' if idx is not None else ""
+        sval = f"{val:.10g}" if val == val else "NaN"
+        lines.append(f"{name}{label} {sval}")
+    return "\n".join(lines) + "\n"
+
+
+def write_snapshot(path: str, snap: dict) -> str:
+    """Write a snapshot as deterministic JSON (sorted keys)."""
+    with open(path, "w") as f:
+        json.dump(snap, f, indent=1, sort_keys=True, default=_json_default)
+        f.write("\n")
+    return path
+
+
+def _json_default(v):
+    item = getattr(v, "item", None)
+    if item is not None and getattr(v, "ndim", 1) == 0:
+        return item()
+    tolist = getattr(v, "tolist", None)
+    if tolist is not None:
+        return tolist()
+    return repr(v)

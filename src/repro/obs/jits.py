@@ -1,0 +1,118 @@
+"""jit-cache introspection: hit/miss and compile-time counters for the
+repo's hot jitted entry points.
+
+A compile storm — e.g. a constraint signature or padded batch size that
+varies call-to-call — is invisible from outside: the program just runs
+slow. ``JitProbe.track`` wraps a call to a ``jax.jit``-ed function and
+reads the function's compiled-signature cache size before and after
+(``PjitFunction._cache_size``): growth means this call compiled. The
+probe counts calls / hits / misses, accumulates the wall time of missing
+calls (compile + first run — the cost the caller actually felt), and
+keeps per-key tallies when the caller labels the static signature (the
+planner passes ``(t, constrained, capfin, slo_any)``).
+
+Probes live in a module-level registry so instrumentation at the call
+site (``core.shp_jax``, ``online.replan_device``) and snapshotting at
+the export layer need no shared plumbing. Counters are lock-protected —
+the fleet planner chunks solves across a thread pool.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, Optional
+
+_REGISTRY: Dict[str, "JitProbe"] = {}
+_REGISTRY_LOCK = threading.Lock()
+
+
+def _cache_size(fn) -> Optional[int]:
+    """Compiled-signature count of a jitted callable, or None when the
+    runtime doesn't expose it (the probe then degrades to call counts)."""
+    getter = getattr(fn, "_cache_size", None)
+    if getter is None:
+        return None
+    try:
+        return int(getter())
+    except Exception:
+        return None
+
+
+class JitProbe:
+    """Hit/miss/compile-time counters for one jitted function."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self.calls = 0
+        self.hits = 0
+        self.misses = 0
+        self.compile_s = 0.0  # wall time of missing calls (compile + run)
+        self.cache_size = 0  # compiled signatures at last tracked call
+        self.by_key: Dict[str, Dict[str, float]] = {}
+        self._lock = threading.Lock()
+
+    def track(self, fn, *args, key=None, **kwargs):
+        """Call ``fn(*args, **kwargs)`` and account whether it compiled.
+        ``key`` labels the static signature (per-key tallies)."""
+        before = _cache_size(fn)
+        t0 = time.perf_counter()
+        out = fn(*args, **kwargs)
+        dt = time.perf_counter() - t0
+        after = _cache_size(fn)
+        missed = (after is not None and before is not None
+                  and after > before)
+        with self._lock:
+            self.calls += 1
+            if missed:
+                self.misses += 1
+                self.compile_s += dt
+            else:
+                self.hits += 1
+            if after is not None:
+                self.cache_size = after
+            if key is not None:
+                kd = self.by_key.setdefault(
+                    str(key), {"calls": 0, "misses": 0, "compile_s": 0.0})
+                kd["calls"] += 1
+                if missed:
+                    kd["misses"] += 1
+                    kd["compile_s"] += dt
+        return out
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            return {"calls": self.calls, "hits": self.hits,
+                    "misses": self.misses,
+                    "compile_s": round(self.compile_s, 6),
+                    "cache_size": self.cache_size,
+                    "by_key": {k: dict(v) for k, v in self.by_key.items()}}
+
+    def reset(self) -> None:
+        with self._lock:
+            self.calls = self.hits = self.misses = 0
+            self.compile_s = 0.0
+            self.by_key.clear()
+
+
+def probe(name: str) -> JitProbe:
+    """Get-or-create the named probe."""
+    with _REGISTRY_LOCK:
+        p = _REGISTRY.get(name)
+        if p is None:
+            p = _REGISTRY[name] = JitProbe(name)
+        return p
+
+
+def snapshot() -> Dict[str, dict]:
+    """{probe name: counters} for every registered probe."""
+    with _REGISTRY_LOCK:
+        probes = list(_REGISTRY.values())
+    return {p.name: p.snapshot() for p in probes}
+
+
+def reset() -> None:
+    """Zero every probe's counters (the probes stay registered)."""
+    with _REGISTRY_LOCK:
+        probes = list(_REGISTRY.values())
+    for p in probes:
+        p.reset()

@@ -1,0 +1,96 @@
+"""Device-side metric accumulators for the jitted engine step.
+
+``MetricsState`` is a tiny pytree carried through ``StreamEngine``'s
+jitted multi-bucket step. Every update is computed from values the step
+already materializes (the batch ids, the write mask, the eviction ids,
+the pre-update reservoir bar, the drift state) — a handful of extra
+scalar reductions fused into the same XLA program, with **zero
+additional host syncs**: the counters live on device until ``snapshot``
+drains them (one transfer, at chunk boundaries or on demand), and with
+metrics disabled the step traces the exact pre-obs computation, so
+obs-off output is bit-identical.
+
+The integer counters are packed into ONE ``(7,)`` int32 vector (plus a
+float32 scalar for the drift score) so the obs variant adds only two
+pytree leaves to the step's signature — per-call dispatch cost on small
+fleets is dominated by leaf count, not by the reductions themselves.
+Drain and rebase into the host-side accumulator before a window
+approaches 2^31 docs (x64 stays off on the hot path).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+# slots of the packed counter vector
+DOCS, ADMITS, EVICTIONS, BAR_CANDIDATES, BAR_PASSES, CHUNKS, DRIFT_FIRED = \
+    range(7)
+
+
+class MetricsState(NamedTuple):
+    """Fleet-level counters, accumulated on device."""
+
+    counts: jax.Array  # (7,) i32 — see the slot constants above
+    drift_score_max: jax.Array  # () f32 — max normalized drift score seen
+
+
+def init() -> MetricsState:
+    return MetricsState(counts=jnp.zeros((7,), jnp.int32),
+                        drift_score_max=jnp.zeros((), jnp.float32))
+
+
+def accumulate_bucket(ms: MetricsState, batch_scores, batch_ids, bar,
+                      wrote, evicted) -> MetricsState:
+    """Fold one bucket's step outputs into the counters (pure; traced
+    inside the jitted step). ``bar`` is the pre-update entry bar
+    (``state.scores[:, -1]``): the kernel-filter pass rate is the
+    fraction of live candidates scoring above it — on unfull reservoirs
+    the bar is -inf and every candidate passes, matching the filter."""
+    live = batch_ids >= 0
+    i32 = jnp.int32
+    docs = live.sum(dtype=i32)
+    z = jnp.zeros((), i32)
+    delta = jnp.stack([
+        docs,                                                # DOCS
+        wrote.sum(dtype=i32),                                # ADMITS
+        (evicted >= 0).sum(dtype=i32),                       # EVICTIONS
+        docs,                                                # BAR_CANDIDATES
+        (live & (batch_scores > bar[:, None])).sum(dtype=i32),  # BAR_PASSES
+        z, z])
+    return ms._replace(counts=ms.counts + delta)
+
+
+def accumulate_drift(ms: MetricsState, score_max, fired_count
+                     ) -> MetricsState:
+    """Fold the drift detector's per-step summary (max normalized score,
+    latched fire count) into the counters."""
+    counts = ms.counts.at[DRIFT_FIRED].set(
+        jnp.asarray(fired_count, jnp.int32))
+    return MetricsState(
+        counts=counts,
+        drift_score_max=jnp.maximum(ms.drift_score_max,
+                                    jnp.asarray(score_max, jnp.float32)))
+
+
+def bump_chunk(ms: MetricsState) -> MetricsState:
+    return ms._replace(counts=ms.counts.at[CHUNKS].add(1))
+
+
+def snapshot(ms: MetricsState) -> dict:
+    """Drain the device counters to host scalars (the only sync point)."""
+    import numpy as np
+    c = np.asarray(ms.counts)
+    cand, passes = int(c[BAR_CANDIDATES]), int(c[BAR_PASSES])
+    return {
+        "docs": int(c[DOCS]),
+        "admits": int(c[ADMITS]),
+        "evictions": int(c[EVICTIONS]),
+        "bar_candidates": cand,
+        "bar_passes": passes,
+        "filter_pass_rate": passes / cand if cand else 0.0,
+        "chunks": int(c[CHUNKS]),
+        "drift_score_max": float(np.asarray(ms.drift_score_max)),
+        "drift_fired": int(c[DRIFT_FIRED]),
+    }

@@ -1,0 +1,77 @@
+"""The shared timing API: the two measurement disciplines the repo's
+benchmarks hand-rolled, plus a lightweight span helper.
+
+* ``time_jax`` — device-dispatch timing: one warm-up call to compile,
+  then ``reps`` back-to-back dispatches with a single
+  ``block_until_ready`` on the last result (the steady-state per-call
+  latency of a jitted step; compile time excluded). Returns
+  microseconds per call — the ``BENCH_*.json`` unit.
+* ``time_best`` — host-call timing: best of ``repeats`` full wall-clock
+  runs (the right discipline for host-side planners whose first call
+  may compile — the best run is the steady state). Returns seconds.
+* ``span`` — a ``perf_counter`` interval usable bare (returns an object
+  whose ``.dur_s`` is set on exit) or recorded into a ``trace.Tracer``.
+
+``benchmarks/streams_bench.py``, ``benchmarks/planner_bench.py`` and
+``online.evaluate`` all measure through this module.
+"""
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+from typing import Optional
+
+
+def time_jax(fn, *args, reps: int = 20, **kwargs) -> float:
+    """Steady-state microseconds per call of a jitted callable."""
+    import jax
+    jax.block_until_ready(fn(*args, **kwargs))  # compile
+    t0 = time.perf_counter_ns()
+    out = None
+    for _ in range(reps):
+        out = fn(*args, **kwargs)
+    jax.block_until_ready(out)
+    return (time.perf_counter_ns() - t0) / 1000.0 / reps
+
+
+def time_best(fn, repeats: int = 3) -> float:
+    """Best-of-``repeats`` wall seconds of a host call."""
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+class Span:
+    """Result object of ``span`` — ``dur_s`` is valid after the block."""
+
+    __slots__ = ("name", "dur_s")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.dur_s = 0.0
+
+
+@contextmanager
+def span(name: str, tracer=None, **attrs):
+    """Time a block; mirrors into ``tracer`` (a ``trace.Tracer``) when
+    one is given, so ad-hoc timing and the event timeline share records."""
+    if tracer is not None:
+        with tracer.span(name, **attrs):
+            sp = Span(name)
+            t0 = time.perf_counter()
+            yield sp
+            sp.dur_s = time.perf_counter() - t0
+        return
+    sp = Span(name)
+    t0 = time.perf_counter()
+    yield sp
+    sp.dur_s = time.perf_counter() - t0
+
+
+def maybe_span(tracer: Optional[object], name: str, **attrs):
+    """``tracer.span(...)`` when a tracer is present, else a bare timed
+    span — the call-site idiom for optionally-observed code paths."""
+    return span(name, tracer=tracer, **attrs)

@@ -21,36 +21,45 @@ knowledge would."""
 from __future__ import annotations
 
 import itertools
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core import simulator
 from repro.core.placement import Policy
+from repro.obs import timers
 from repro.streams.engine import StreamEngine, StreamSpec
 
 
 def run_fleet(traces: np.ndarray, specs: Sequence[StreamSpec], *,
               replan=None, chunk: int = 64, constraints=None,
-              rng: Optional[np.random.Generator] = None) -> StreamEngine:
+              rng: Optional[np.random.Generator] = None,
+              obs=None) -> StreamEngine:
     """Feed per-stream traces (M, N) through a fresh ``StreamEngine`` in
     width-``chunk`` steps (batches shuffled across tenants when ``rng`` is
-    given) and finalize. Returns the engine (events, meter, survivors)."""
+    given) and finalize. Returns the engine (events, meter, survivors).
+    ``obs`` (a ``repro.obs.Observability``) threads the telemetry layer
+    through the engine — device metric counters, residual alert channel,
+    span timeline."""
     m, n = traces.shape
-    engine = StreamEngine(specs, replan=replan, constraints=constraints)
+    engine = StreamEngine(specs, replan=replan, constraints=constraints,
+                          obs=obs)
     sids = np.array([s.stream_id for s in specs])
-    for t0 in range(0, n, chunk):
-        w = min(chunk, n - t0)
-        mixed_sids = np.repeat(sids, w)
-        mixed_dids = np.tile(np.arange(t0, t0 + w), m)
-        mixed_scores = traces[:, t0:t0 + w].reshape(-1)
-        if rng is not None:
-            perm = rng.permutation(mixed_sids.size)
-            mixed_sids, mixed_dids, mixed_scores = (
-                mixed_sids[perm], mixed_dids[perm], mixed_scores[perm])
-        engine.ingest(mixed_sids, mixed_scores, mixed_dids)
-    engine.finalize()
+    tracer = obs.tracer if obs is not None else None
+    with timers.span("online.run_fleet", tracer=tracer, m=m, n=n,
+                     chunk=chunk):
+        for t0 in range(0, n, chunk):
+            w = min(chunk, n - t0)
+            mixed_sids = np.repeat(sids, w)
+            mixed_dids = np.tile(np.arange(t0, t0 + w), m)
+            mixed_scores = traces[:, t0:t0 + w].reshape(-1)
+            if rng is not None:
+                perm = rng.permutation(mixed_sids.size)
+                mixed_sids, mixed_dids, mixed_scores = (
+                    mixed_sids[perm], mixed_dids[perm], mixed_scores[perm])
+            engine.ingest(mixed_sids, mixed_scores, mixed_dids)
+        engine.finalize()
     return engine
 
 
@@ -139,6 +148,7 @@ class FleetEvaluation:
     oracle_cost: np.ndarray  # (M,) NaN when the oracle sweep was skipped
     schedules: Dict[int, List[Tuple]]
     engine: StreamEngine
+    timings: Dict[str, float] = field(default_factory=dict)  # phase seconds
 
     @property
     def fleet_static(self) -> float:
@@ -157,48 +167,59 @@ def evaluate_fleet(traces: np.ndarray, specs: Sequence[StreamSpec], *,
                    replan, drift_at: Optional[int] = None, chunk: int = 64,
                    constraints=None, oracle_grid: int = 16,
                    drift_schedule=None, oracle_probes: int = 3,
-                   rng: Optional[np.random.Generator] = None
-                   ) -> FleetEvaluation:
+                   rng: Optional[np.random.Generator] = None,
+                   obs=None) -> FleetEvaluation:
     """Run the closed loop over the fleet, then score static vs replanned
     realized costs per stream. With ``drift_at`` the oracle column is
     filled too: the process oracle when ``drift_schedule`` (the true
     multiplier schedule) is given, else the per-trace hindsight bound.
-    ``specs`` must carry cost models."""
-    engine = run_fleet(traces, specs, replan=replan, chunk=chunk,
-                       constraints=constraints, rng=rng)
+    ``specs`` must carry cost models. ``obs`` threads the telemetry
+    layer through the run; the phase wall times land in
+    ``FleetEvaluation.timings`` (and, with ``obs``, on the span
+    timeline)."""
+    tracer = obs.tracer if obs is not None else None
+    with timers.span("online.evaluate.engine", tracer=tracer) as sp_run:
+        engine = run_fleet(traces, specs, replan=replan, chunk=chunk,
+                           constraints=constraints, rng=rng, obs=obs)
     m = traces.shape[0]
     schedules = schedules_from_events(engine)
     static_cost = np.zeros(m)
     replanned_cost = np.zeros(m)
     oracle_cost = np.full(m, np.nan)
-    for i, spec in enumerate(specs):
-        row = engine.stream_row(spec.stream_id)
-        base = tuple(b for b in engine.meter.boundaries[row]
-                     if np.isfinite(b))
-        # the meter's row holds the *current* (possibly re-planned)
-        # boundaries; the a-priori vector is the first event's old bounds
-        for ev in engine.replan_events:
-            if ev.stream_id == spec.stream_id:
-                base = ev.old_bounds
-                break
-        mig = bool(engine.meter.migrate[row])
-        static_cost[i] = realized(traces[i], spec.k, spec.cost_model,
-                                  base, mig).cost_total
-        sched = schedules.get(spec.stream_id)
-        replanned_cost[i] = realized(traces[i], spec.k, spec.cost_model,
-                                     base, mig, schedule=sched).cost_total
-        if drift_at is not None and not mig:
-            if drift_schedule is not None:
-                oracle_cost[i], _ = process_oracle(
-                    traces[i], spec.k, spec.cost_model, base, drift_at,
-                    drift_schedule,
-                    rng if rng is not None else np.random.default_rng(i),
-                    grid=oracle_grid, probes=oracle_probes)
-            else:
-                oracle_cost[i], _ = hindsight_oracle(
-                    traces[i], spec.k, spec.cost_model, base, drift_at,
-                    grid=oracle_grid)
+    with timers.span("online.evaluate.score", tracer=tracer) as sp_score:
+        for i, spec in enumerate(specs):
+            row = engine.stream_row(spec.stream_id)
+            base = tuple(b for b in engine.meter.boundaries[row]
+                         if np.isfinite(b))
+            # the meter's row holds the *current* (possibly re-planned)
+            # boundaries; the a-priori vector is the first event's old
+            # bounds
+            for ev in engine.replan_events:
+                if ev.stream_id == spec.stream_id:
+                    base = ev.old_bounds
+                    break
+            mig = bool(engine.meter.migrate[row])
+            static_cost[i] = realized(traces[i], spec.k, spec.cost_model,
+                                      base, mig).cost_total
+            sched = schedules.get(spec.stream_id)
+            replanned_cost[i] = realized(traces[i], spec.k,
+                                         spec.cost_model, base, mig,
+                                         schedule=sched).cost_total
+            if drift_at is not None and not mig:
+                if drift_schedule is not None:
+                    oracle_cost[i], _ = process_oracle(
+                        traces[i], spec.k, spec.cost_model, base, drift_at,
+                        drift_schedule,
+                        (rng if rng is not None
+                         else np.random.default_rng(i)),
+                        grid=oracle_grid, probes=oracle_probes)
+                else:
+                    oracle_cost[i], _ = hindsight_oracle(
+                        traces[i], spec.k, spec.cost_model, base, drift_at,
+                        grid=oracle_grid)
     return FleetEvaluation(static_cost=static_cost,
                            replanned_cost=replanned_cost,
                            oracle_cost=oracle_cost, schedules=schedules,
-                           engine=engine)
+                           engine=engine,
+                           timings={"engine_s": sp_run.dur_s,
+                                    "score_s": sp_score.dur_s})

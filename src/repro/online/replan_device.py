@@ -300,10 +300,15 @@ def solve_group(cw, cr, cs, n, k, rpw, cap, lat, slo, n0, rho, b0, *,
 
     args = [_pad(x) for x in (cw, cr, cs, n, k, rpw, cap, lat, slo, n0,
                               rho, b0)]
+    # jit-cache probe (repro.obs.jits): one compiled signature per
+    # (T, constraint-signature, padded-R) static key
+    from repro.obs import jits as obs_jits
+    probe = obs_jits.probe("replan_device.solve")
+    key = (t, constrained, capfin, slo_any, bool(allow_moves), rp)
     with enable_x64():
-        total, bounds, cost_old = _solve_jit(
-            *args, t=t, constrained=constrained, capfin=capfin,
-            slo_any=slo_any, allow_moves=bool(allow_moves))
+        total, bounds, cost_old = probe.track(
+            _solve_jit, *args, key=key, t=t, constrained=constrained,
+            capfin=capfin, slo_any=slo_any, allow_moves=bool(allow_moves))
         total = np.asarray(total, np.float64)[:r]
         bounds = np.asarray(bounds, np.float64)[:r]
         cost_old = np.asarray(cost_old, np.float64)[:r]

@@ -139,7 +139,8 @@ def evicted_ids(old: BatchedReservoirState,
 
 
 def _make_step(use_kernel_filter: bool, block_n: int, drift_cfg=None,
-               bucket_ks: Tuple[int, ...] = (), update_path: str = "auto"):
+               bucket_ks: Tuple[int, ...] = (), update_path: str = "auto",
+               with_metrics: bool = False):
     """One jitted step over ALL buckets: states/batches are same-length
     tuples (the pytree structure is static, so the whole fleet advances in
     a single XLA computation). With ``drift_cfg`` (online re-planning) the
@@ -154,13 +155,21 @@ def _make_step(use_kernel_filter: bool, block_n: int, drift_cfg=None,
     legacy all-sort path. ``use_kernel_filter`` upgrades the filtered
     path's candidate scan to the Pallas kernel. Narrow batches (W < K)
     always take the fused sort-merge, whose one sort is then cheaper.
+
+    With ``with_metrics`` (repro.obs) the step additionally folds a
+    device-side ``obs.metrics.MetricsState`` — a few scalar reductions
+    over values the step already materializes, fused into the same XLA
+    program; when off, ``mstate`` is an empty tuple and the traced
+    computation is exactly the pre-obs step (bit-identical outputs).
     """
     if drift_cfg is not None:
         from repro.online import drift as drift_mod
+    if with_metrics:
+        from repro.obs import metrics as metrics_mod
     if update_path not in ("auto", "fused"):
         raise ValueError(f"unknown update_path {update_path!r}")
 
-    def step(states, batches, dstates):
+    def step(states, batches, dstates, mstate):
         new_states, wrotes, evs, new_dstates = [], [], [], []
         for bi, (st, (s, i)) in enumerate(zip(states, batches)):
             wide = s.shape[1] >= st.scores.shape[1]
@@ -171,13 +180,28 @@ def _make_step(use_kernel_filter: bool, block_n: int, drift_cfg=None,
                 new, wrote = update(st, s, i)
             new_states.append(new)
             wrotes.append(wrote)
-            evs.append(evicted_ids(st, new))
+            ev = evicted_ids(st, new)
+            evs.append(ev)
             if drift_cfg is not None:
                 new_dstates.append(drift_mod.update(
                     dstates[bi], wrote.sum(axis=1), new.seen,
                     float(bucket_ks[bi]), drift_cfg))
+            if with_metrics:
+                mstate = metrics_mod.accumulate_bucket(
+                    mstate, s, i, st.scores[:, -1], wrote, ev)
+        if with_metrics:
+            if drift_cfg is not None and new_dstates:
+                score_max = jnp.asarray(0.0, jnp.float32)
+                fired = jnp.asarray(0, jnp.int32)
+                for ds in new_dstates:
+                    score_max = jnp.maximum(
+                        score_max, drift_mod.scores(ds, drift_cfg).max())
+                    fired = fired + ds.fired.sum(dtype=jnp.int32)
+                mstate = metrics_mod.accumulate_drift(mstate, score_max,
+                                                      fired)
+            mstate = metrics_mod.bump_chunk(mstate)
         return tuple(new_states), tuple(wrotes), tuple(evs), \
-            tuple(new_dstates)
+            tuple(new_dstates), mstate
 
     return jax.jit(step)
 
@@ -255,7 +279,8 @@ class StreamEngine:
 
     def __init__(self, specs: Sequence[StreamSpec], *,
                  use_kernel_filter: bool = False, block_n: int = 512,
-                 constraints=None, replan=None, update_path: str = "auto"):
+                 constraints=None, replan=None, update_path: str = "auto",
+                 obs=None):
         if not specs:
             raise ValueError("need at least one stream")
         by_id = {s.stream_id: s for s in specs}
@@ -265,14 +290,27 @@ class StreamEngine:
             {s.stream_id: s.k for s in specs})
         self.router = router.StreamRouter(self.buckets)
         self.constraints = constraints
+        # observability (repro.obs): device metric pytree in the step,
+        # residual alert channel off the meter drain, span/event timeline
+        self._obs = obs
+        self._tracer = obs.tracer if obs is not None else None
+        if obs is not None:
+            obs.attach(self)
         # fleet plan for streams that carry a cost model (2- and N-tier mix)
         planned = [s for s in specs if s.explicit_boundaries() is None]
         if planned:
             if any(s.cost_model is None for s in planned):
                 raise ValueError(
                     "each stream needs r, boundaries, or a cost_model")
-            plan = planner.plan_fleet_mixed([s.cost_model for s in planned],
-                                            constraints=constraints)
+            if self._tracer is not None:
+                with self._tracer.span("plan", streams=len(planned)):
+                    plan = planner.plan_fleet_mixed(
+                        [s.cost_model for s in planned],
+                        constraints=constraints)
+            else:
+                plan = planner.plan_fleet_mixed(
+                    [s.cost_model for s in planned],
+                    constraints=constraints)
             bad = [s.stream_id for i, s in enumerate(planned)
                    if not plan.feasible(i)]
             if bad:
@@ -335,11 +373,23 @@ class StreamEngine:
                 [self._model_of_row.get(row) for row in range(self.m)],
                 constraints=cset_arg, config=replan)
             self._drift_states = [drift_mod.init(b.m) for b in self.buckets]
+        self._metrics_state = None
+        self._residuals = None
+        if obs is not None:
+            if obs.config.metrics:
+                from repro.obs import metrics as metrics_mod
+                self._metrics_state = metrics_mod.init()
+            if obs.config.residuals:
+                from repro.obs.residuals import ResidualMonitor
+                self._residuals = ResidualMonitor(
+                    self.meter.ks, alpha=obs.config.residual_alpha,
+                    max_checks=obs.config.residual_max_checks)
         self._step = _make_step(
             use_kernel_filter, block_n,
             drift_cfg=None if replan is None else replan.drift,
             bucket_ks=tuple(b.k for b in self.buckets),
-            update_path=update_path)
+            update_path=update_path,
+            with_metrics=self._metrics_state is not None)
 
     @property
     def m(self) -> int:
@@ -357,40 +407,76 @@ class StreamEngine:
         A doc id may appear at most once per stream per batch (they are
         stream positions); the router rejects within-batch duplicates.
         Re-observations across batches are deduped by the merge itself."""
+        if self._tracer is not None and self._obs.config.trace_ingest:
+            with self._tracer.span("ingest", docs=int(len(stream_ids))):
+                self._ingest(stream_ids, scores, doc_ids, pad_to)
+        else:
+            self._ingest(stream_ids, scores, doc_ids, pad_to)
+
+    def _ingest(self, stream_ids, scores, doc_ids, pad_to) -> None:
         routed = self.router.route(stream_ids, scores, doc_ids, pad_to=pad_to)
         batches = tuple((jnp.asarray(s), jnp.asarray(i)) for s, i in routed)
         dstates = (tuple(self._drift_states)
                    if self._drift_states is not None else ())
-        new_states, wrotes, evs, new_dstates = self._step(
-            tuple(self._states), batches, dstates)
+        mstate = (self._metrics_state
+                  if self._metrics_state is not None else ())
+        new_states, wrotes, evs, new_dstates, mstate = self._step(
+            tuple(self._states), batches, dstates, mstate)
         self._states = list(new_states)
+        if self._metrics_state is not None:
+            self._metrics_state = mstate
         for bi in range(len(self.buckets)):
             _, dense_ids = routed[bi]
             self.meter.record_update(self._global_rows[bi], dense_ids,
                                      np.asarray(wrotes[bi]),
                                      np.asarray(evs[bi]),
                                      np.asarray(new_states[bi].ids))
+        residual_rows = ()
+        if self._residuals is not None:
+            # chunk-boundary drain: the alert channel tests the meter's
+            # cumulative write residual against its concentration bound
+            newly = self._residuals.update(self.meter.observed,
+                                           self.meter.writes.sum(1))
+            if newly.any() and self._tracer is not None:
+                sc = self._residuals.scores()
+                for row in np.flatnonzero(newly):
+                    self._tracer.emit(
+                        "residual_alert", stream_id=self._sid_of_row[row],
+                        row=int(row), position=int(self.meter.observed[row]),
+                        score=float(sc[row]),
+                        step=int(self._residuals.steps))
+            if (self._obs.config.residual_trigger
+                    and self._drift_states is not None):
+                residual_rows = tuple(
+                    int(r) for r in np.flatnonzero(self._residuals.alerted))
         if self._drift_states is not None:
             self._drift_states = list(new_dstates)
-            self._maybe_replan()
+            self._maybe_replan(residual_rows)
 
-    def _maybe_replan(self) -> None:
-        """Between chunks: re-plan the streams whose drift detector fired,
-        apply the boundary deltas to the meter (re-tiering residents, with
-        the relocation bill already priced into the decision), and reset
-        the consumed detector evidence."""
+    def _maybe_replan(self, residual_rows: Sequence[int] = ()) -> None:
+        """Between chunks: re-plan the streams whose drift detector fired
+        — unioned with the obs residual-alert channel when it is
+        configured as an earlier trigger (``ObsConfig.residual_trigger``)
+        — apply the boundary deltas to the meter (re-tiering residents,
+        with the relocation bill already priced into the decision), and
+        reset the consumed detector (and residual) evidence."""
         from repro.online import drift as drift_mod
         fired_rows, rhos = [], []
         bucket_of, row_in_bucket = [], []
+        extra = set(residual_rows)
         for bi in range(len(self.buckets)):
             ds = self._drift_states[bi]
             fired = np.asarray(ds.fired)
-            if not fired.any():
+            rows_b = self._global_rows[bi]
+            flag = fired.copy()
+            if extra:
+                flag |= np.isin(rows_b, list(extra))
+            if not flag.any():
                 continue
             rho_b = np.asarray(drift_mod.rho_hat(ds,
                                                  self.replan_config.drift))
-            for j in np.flatnonzero(fired):
-                fired_rows.append(int(self._global_rows[bi][j]))
+            for j in np.flatnonzero(flag):
+                fired_rows.append(int(rows_b[j]))
                 rhos.append(float(rho_b[j]))
                 bucket_of.append(bi)
                 row_in_bucket.append(int(j))
@@ -404,10 +490,17 @@ class StreamEngine:
             depth = (cm.t - 1 if hasattr(cm, "t")
                      else int(np.isfinite(b).sum()))
             bounds.append(tuple(b[:depth]))
-        dec = self._replanner.replan(rows, self.meter.observed[rows],
-                                     np.asarray(rhos), bounds,
-                                     self.meter.migrate[rows],
-                                     hwm=self.meter.occupancy_hwm[rows])
+        if self._tracer is not None:
+            with self._tracer.span("replan", flagged=len(fired_rows)):
+                dec = self._replanner.replan(
+                    rows, self.meter.observed[rows], np.asarray(rhos),
+                    bounds, self.meter.migrate[rows],
+                    hwm=self.meter.occupancy_hwm[rows])
+        else:
+            dec = self._replanner.replan(rows, self.meter.observed[rows],
+                                         np.asarray(rhos), bounds,
+                                         self.meter.migrate[rows],
+                                         hwm=self.meter.occupancy_hwm[rows])
         touched_buckets = set()
         for j, row in enumerate(rows):
             if not dec.considered[j]:
@@ -429,6 +522,13 @@ class StreamEngine:
                 suffix_cost_old=float(dec.suffix_cost_old[j]),
                 suffix_cost_new=float(dec.suffix_cost_new[j]),
                 move_bill=float(dec.move_bill[j]), moved_docs=moved))
+            if self._tracer is not None:
+                self._tracer.emit(
+                    "replan_decision", stream_id=self._sid_of_row[int(row)],
+                    row=int(row), position=int(dec.n_seen[j]),
+                    rho=float(dec.rho[j]), applied=bool(dec.applied[j]),
+                    feasible=bool(dec.feasible[j]), moved_docs=moved,
+                    residual_triggered=int(row) in set(residual_rows))
         # boundary deltas are placement metadata: the reservoirs themselves
         # must be untouched — every affected bucket keeps the sorted-desc
         # score invariant the merge relies on
@@ -444,6 +544,12 @@ class StreamEngine:
                   if bucket_of[j] == bi]] = True
             self._drift_states[bi] = drift_mod.reset_where(
                 self._drift_states[bi], jnp.asarray(mask))
+        if self._residuals is not None:
+            # the re-plan consumed this evidence — restart the residual
+            # channel for the processed rows, like the detector
+            rmask = np.zeros(self.m, bool)
+            rmask[rows] = True
+            self._residuals.reset_where(rmask)
 
     def _negotiate_admission(self, row: int, position: int) -> None:
         """A constrained suffix re-solve found no feasible plan (or the
@@ -460,6 +566,11 @@ class StreamEngine:
         self.admission_events.append(AdmissionEvent(
             stream_id=self._sid_of_row[row], row=row, position=position,
             decision=decision))
+        if self._tracer is not None:
+            self._tracer.emit("admission", stream_id=self._sid_of_row[row],
+                              row=row, position=position,
+                              admitted=bool(getattr(decision, "admitted",
+                                                    False)))
 
     def drift_scores(self) -> Dict[int, float]:
         """{stream_id: normalized change score} (>= 1 fires; online mode
@@ -496,9 +607,72 @@ class StreamEngine:
                 out[sid] = np.sort(v[v >= 0]).astype(np.int64)
         return out
 
+    def residual_alerts(self) -> Dict[int, int]:
+        """{stream_id: docs observed at first alert} of the obs residual
+        channel — directly comparable to ``replan_events[i].position``
+        (streams that never alerted are absent; obs mode only)."""
+        if self._residuals is None:
+            raise ValueError("engine built without obs= (or residuals off)")
+        out = {}
+        for row in np.flatnonzero(self._residuals.first_alert_seen >= 0):
+            out[self._sid_of_row[int(row)]] = int(
+                self._residuals.first_alert_seen[row])
+        return out
+
+    def obs_snapshot(self) -> Dict:
+        """Everything the obs layer exports for this engine: drained
+        device counters, meter ledger aggregates (per-tier occupancy
+        high-water marks, relocations), and the model-referenced
+        residual metrics (realized / expected / z for the write law;
+        realized / expected for the occupancy law)."""
+        from repro.obs import residuals as res_mod
+        out: Dict = {"fleet": {"m": self.m, "buckets": len(self.buckets)}}
+        if self._metrics_state is not None:
+            from repro.obs import metrics as metrics_mod
+            out["engine"] = metrics_mod.snapshot(self._metrics_state)
+        out["meter"] = {
+            "observed": int(self.meter.observed.sum()),
+            "writes": int(self.meter.writes.sum()),
+            "reads": int(self.meter.reads.sum()),
+            "deletes": int(self.meter.deletes.sum()),
+            "migrations": int(self.meter.migrations.sum()),
+            "relocations": int(self.meter.relocations.sum()),
+            "occupancy_hwm": [int(x)
+                              for x in self.meter.occupancy_hwm.sum(0)],
+        }
+        # the monitor's totals evaluate the write law at the actual
+        # ingest chunking; without it fall back to the per-doc law
+        wr = (self._residuals.write_z() if self._residuals is not None
+              else res_mod.write_residuals(self.meter))
+        occ = res_mod.occupancy_residuals(self.meter)
+        out["residuals"] = {
+            "writes": {
+                "fleet_realized": float(wr["realized"].sum()),
+                "fleet_expected": float(wr["expected"].sum()),
+                "max_abs_z": float(np.abs(wr["z"]).max()) if self.m else 0.0,
+                "mean_z": float(wr["z"].mean()) if self.m else 0.0,
+            },
+            "occupancy": {
+                "fleet_realized": float(np.nansum(occ["realized"])),
+                "fleet_expected": float(np.nansum(occ["expected"])),
+                "max_normalized": float(np.nanmax(
+                    np.abs(occ["normalized"]))) if self.m else 0.0,
+            },
+        }
+        if self._residuals is not None:
+            out["residuals"]["alerts"] = self._residuals.snapshot()
+        return out
+
     def finalize(self) -> Dict[int, np.ndarray]:
         """End-of-window: meter the final top-K read per stream (tiered by
         each stream's r) and return the survivors."""
+        if self._tracer is not None:
+            with self._tracer.span("finalize"):
+                for bi in range(len(self.buckets)):
+                    self.meter.record_reads(
+                        self._global_rows[bi],
+                        np.asarray(self._states[bi].ids))
+                return self.survivors()
         for bi in range(len(self.buckets)):
             self.meter.record_reads(self._global_rows[bi],
                                     np.asarray(self._states[bi].ids))
@@ -538,7 +712,12 @@ class StreamEngine:
         ``FleetMeter.check_constraints``). Streams planned from cost
         models are checked against the ``effective_capacity`` merge, so
         topology-declared ``TierSpec.capacity_docs`` are enforced at
-        reconciliation exactly as at planning time."""
+        reconciliation exactly as at planning time.
+
+        The report's ``"violations"`` key is the structured per-stream
+        list ({stream_id, row, tier, kind, measured, limit, margin});
+        with ``obs=`` configured every entry is also emitted on the obs
+        event log as a ``constraint_violation`` event."""
         from repro.core.constraints import effective_capacity
         cset = constraints if constraints is not None else self.constraints
         if cset is None:
@@ -567,6 +746,12 @@ class StreamEngine:
                     g = float(sizes[row]) if sizes is not None else 0.0
                     cap = cset.capacity_array(nt_meter, g)
                 per_stream_caps[row] = cap
-        return self.meter.check_constraints(cset, latencies=latencies,
-                                            doc_gb=doc_gb,
-                                            per_stream_caps=per_stream_caps)
+        report = self.meter.check_constraints(cset, latencies=latencies,
+                                              doc_gb=doc_gb,
+                                              per_stream_caps=per_stream_caps)
+        for v in report["violations"]:
+            if v["row"] is not None:
+                v["stream_id"] = self._sid_of_row[v["row"]]
+            if self._tracer is not None:
+                self._tracer.emit("constraint_violation", **v)
+        return report

@@ -323,14 +323,40 @@ class FleetMeter:
                 shared_violations[c.tier] = excess
         slo = constraint_set.max_read_latency
         slo_violations = np.zeros(self.m, bool)
+        realized_lat = None
         if latencies is not None and np.isfinite(slo):
-            slo_violations = self.read_latency(latencies) > slo
+            realized_lat = self.read_latency(latencies)
+            slo_violations = realized_lat > slo
+        # structured per-violation report: one dict per (stream, tier)
+        # with the measured value, the limit, and the signed margin
+        # (measured − limit > 0 ⇔ violated) — the obs event log's record
+        violations = []
+        for row, tier in zip(*np.nonzero(capacity_violations)):
+            violations.append({
+                "row": int(row), "tier": int(tier), "kind": "capacity",
+                "measured": float(self.occupancy_hwm[row, tier]),
+                "limit": float(cap[row, tier]),
+                "margin": float(self.occupancy_hwm[row, tier]
+                                - cap[row, tier])})
+        for tier, excess in shared_violations.items():
+            for key, over in excess.items():
+                unit = key.split("_", 1)[1]  # docs | bytes
+                violations.append({
+                    "row": None, "tier": int(tier),
+                    "kind": f"shared_capacity_{unit}",
+                    "measured": None, "limit": None,
+                    "margin": float(over)})
+        for row in np.flatnonzero(slo_violations):
+            violations.append({
+                "row": int(row), "tier": None, "kind": "slo",
+                "measured": float(realized_lat[row]), "limit": float(slo),
+                "margin": float(realized_lat[row] - slo)})
         return {
             "capacity_violations": capacity_violations,
             "shared_violations": shared_violations,
             "slo_violations": slo_violations,
-            "ok": not (capacity_violations.any() or shared_violations
-                       or slo_violations.any()),
+            "violations": violations,
+            "ok": not violations,
         }
 
     # ---- classic per-stream view ---------------------------------------

@@ -1,0 +1,336 @@
+"""repro.obs — the telemetry layer's contracts: obs-off bit-identity of
+the jitted engine step, device counters reconciling exactly against the
+host meter ledger, the ResidualMonitor alert channel (null FPR bounded
+by alpha; fires at or before the in-step CUSUM on the drifted
+acceptance fleet), model-referenced reconcile residuals on mixed-depth
+fleets, the structured constraint-violation report, jit-cache probes
+(zero recompiles on identical re-solves), and the tracer / Prometheus
+export formats."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import constraints as cons, costs, shp, simulator
+from repro.obs import (Observability, ObsConfig, export, jits, timers,
+                       trace)
+from repro.obs.residuals import ResidualMonitor
+from repro.online import DriftConfig, ReplanConfig, evaluate
+from repro.streams import engine as seng
+from repro.streams.engine import StreamEngine, StreamSpec
+
+
+# ---------------------------------------------------------------------------
+# scenario helpers
+# ---------------------------------------------------------------------------
+
+def _two_tier_model(n=12000, k=64):
+    wl = costs.WorkloadSpec(n_docs=n, k=k, doc_gb=1e-4, window_months=0.5)
+    hot = costs.TierCosts("hot", put_per_doc=1e-6, get_per_doc=2.7e-4,
+                          storage_per_gb_month=0.05)
+    cold = costs.TierCosts("cold", put_per_doc=8e-5, get_per_doc=1e-6,
+                           storage_per_gb_month=0.02)
+    return costs.TwoTierCostModel(tier_a=hot, tier_b=cold, workload=wl)
+
+
+def _drifted_fleet(m=6, n=12000, k=64, drift_at=3000, mult=8.0, seed=5):
+    rng = np.random.default_rng(seed)
+    cm = _two_tier_model(n=n, k=k)
+    traces = np.stack([simulator.drifted_rank_trace(n, rng,
+                                                    [(drift_at, mult)])
+                       for _ in range(m)])
+    specs = [StreamSpec(stream_id=i, k=k, cost_model=cm) for i in range(m)]
+    cset = cons.ConstraintSet(cons.TierCapacity(0, 4 * k))
+    return traces, specs, cset
+
+
+def _run(traces, specs, cset=None, obs=None, alpha=0.05, chunk=64):
+    return evaluate.run_fleet(
+        traces, specs, replan=ReplanConfig(drift=DriftConfig(alpha=alpha)),
+        chunk=chunk, constraints=cset, obs=obs)
+
+
+# ---------------------------------------------------------------------------
+# bit-identity + device counters
+# ---------------------------------------------------------------------------
+
+def test_obs_off_and_on_bit_identical_output():
+    """The telemetry layer must not perturb the computation: survivors,
+    reservoir state, and the meter ledger are bit-equal with obs on/off
+    (metrics off traces the exact pre-obs step; metrics on only adds
+    counter reductions)."""
+    rng = np.random.default_rng(11)
+    n, m, k = 2048, 5, 16
+    traces = rng.standard_normal((m, n)).astype(np.float32)
+    specs = [StreamSpec(stream_id=i, k=k, r=600.0) for i in range(m)]
+
+    def run(obs):
+        eng = StreamEngine(specs, obs=obs)
+        sids = np.arange(m)
+        for t0 in range(0, n, 64):
+            eng.ingest(np.repeat(sids, 64),
+                       traces[:, t0:t0 + 64].reshape(-1),
+                       np.tile(np.arange(t0, t0 + 64), m))
+        surv = eng.finalize()
+        return eng, surv
+
+    e_off, s_off = run(None)
+    e_on, s_on = run(Observability(ObsConfig()))
+    assert sorted(s_off) == sorted(s_on)
+    for sid in s_off:
+        np.testing.assert_array_equal(s_off[sid], s_on[sid])
+    np.testing.assert_array_equal(e_off.meter.writes, e_on.meter.writes)
+    np.testing.assert_array_equal(e_off.meter.observed, e_on.meter.observed)
+    for b_off, b_on in zip(e_off._states, e_on._states):
+        np.testing.assert_array_equal(np.asarray(b_off.ids),
+                                      np.asarray(b_on.ids))
+        np.testing.assert_array_equal(np.asarray(b_off.scores),
+                                      np.asarray(b_on.scores))
+
+
+def test_device_counters_reconcile_with_meter():
+    """The MetricsState counters drained from the device must equal the
+    host meter's ledger exactly — same events, counted on both sides."""
+    rng = np.random.default_rng(3)
+    n, m, k = 4096, 4, 16
+    traces = rng.standard_normal((m, n)).astype(np.float32)
+    specs = [StreamSpec(stream_id=i, k=k, r=1200.0) for i in range(m)]
+    obs = Observability(ObsConfig())
+    eng = StreamEngine(specs, obs=obs)
+    sids = np.arange(m)
+    for t0 in range(0, n, 64):
+        eng.ingest(np.repeat(sids, 64), traces[:, t0:t0 + 64].reshape(-1),
+                   np.tile(np.arange(t0, t0 + 64), m))
+    snap = eng.obs_snapshot()
+    em = snap["engine"]
+    assert em["docs"] == int(eng.meter.observed.sum()) == n * m
+    assert em["admits"] == int(eng.meter.writes.sum())
+    assert em["evictions"] == int(eng.meter.deletes.sum())
+    assert em["chunks"] == n // 64
+    assert em["bar_candidates"] == em["docs"]
+    # every admitted doc passed the bar; pass rate bounded by admits
+    assert em["bar_passes"] >= em["admits"]
+    assert 0.0 < em["filter_pass_rate"] < 1.0
+
+
+# ---------------------------------------------------------------------------
+# residual alert channel
+# ---------------------------------------------------------------------------
+
+def _monitor_null_fpr(seed: int, alpha: float, m: int = 128) -> float:
+    """Fraction of null (i.u.d.) streams the ResidualMonitor flags across
+    a full window, fed from the engine's batched update — the mirror of
+    test_online's detector ``_null_fpr``."""
+    import jax.numpy as jnp
+    rng = np.random.default_rng(seed)
+    n, k, w = 4096, 16, 64
+    mon = ResidualMonitor(np.full(m, k, np.float64), alpha=alpha)
+    state = seng.init(m, k)
+    traces = rng.standard_normal((m, n)).astype(np.float32)
+    writes = np.zeros(m)
+    for c0 in range(0, n, w):
+        sc = jnp.asarray(traces[:, c0:c0 + w])
+        ids = jnp.tile(jnp.arange(c0, c0 + w, dtype=jnp.int32), (m, 1))
+        state, wrote = seng.update(state, sc, ids)
+        writes += np.asarray(wrote).sum(1)
+        mon.update(np.asarray(state.seen), writes)
+    return float(mon.alerted.mean())
+
+
+@pytest.mark.parametrize("seed,alpha", [(0, 0.05), (1, 0.01)])
+def test_residual_monitor_null_fpr(seed, alpha):
+    assert _monitor_null_fpr(seed, alpha) <= alpha
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    @given(seed=st.integers(min_value=0, max_value=2 ** 16))
+    @settings(max_examples=5, deadline=None)
+    def test_residual_monitor_null_fpr_property(seed):
+        assert _monitor_null_fpr(seed, 0.05) <= 0.05
+
+
+def test_residual_alerts_at_or_before_cusum_on_acceptance_fleet():
+    """On the PR-4 drifted acceptance fleet the obs residual channel must
+    flag >=90% of the detector-detected streams at or before the CUSUM
+    detection index (its excursion statistic equals the detector's, so in
+    practice it ties every stream)."""
+    traces, specs, cset = _drifted_fleet()
+    obs = Observability(ObsConfig(residual_alpha=0.05))
+    eng = _run(traces, specs, cset, obs=obs)
+    alerts = eng.residual_alerts()
+    detected = {}
+    for ev in eng.replan_events:
+        detected.setdefault(ev.stream_id, ev.position)
+    assert detected, "acceptance fleet must trigger detections"
+    won = sum(1 for sid, pos in detected.items()
+              if alerts.get(sid) is not None and alerts[sid] <= pos)
+    assert won / len(detected) >= 0.9
+    # the alert events are on the trace timeline too
+    names = [e["name"] for e in obs.tracer.events]
+    assert "residual_alert" in names and "replan_decision" in names
+
+
+def test_reconcile_residuals_mixed_depth_drifted_fleet():
+    """FleetMeter.reconcile + the monitor's write-law z on a mixed-depth
+    fleet (2- and 3-tier streams) where half the streams drift 8x:
+    undrifted residuals stay near zero, drifted ones are large and
+    positive (the burst admits more than the stationary law expects)."""
+    rng = np.random.default_rng(7)
+    n, k, m, chunk = 6400, 32, 6, 64
+    drifted = np.array([False, True, False, True, False, True])
+    traces = np.stack([
+        simulator.drifted_rank_trace(n, rng, [(1600, 8.0)]) if d
+        else rng.standard_normal(n).astype(np.float64)
+        for d in drifted])
+    specs = []
+    for i in range(m):
+        if i % 2 == 0:  # mixed tier depth: alternate 2- and 3-tier
+            specs.append(StreamSpec(stream_id=i, k=k, r=0.29 * n))
+        else:
+            specs.append(StreamSpec(stream_id=i, k=k,
+                                    boundaries=(0.2 * n, 0.6 * n)))
+    obs = Observability(ObsConfig(residual_alpha=0.05))
+    eng = StreamEngine(specs, obs=obs)
+    sids = np.arange(m)
+    for t0 in range(0, n, chunk):
+        eng.ingest(np.repeat(sids, chunk),
+                   traces[:, t0:t0 + chunk].reshape(-1),
+                   np.tile(np.arange(t0, t0 + chunk), m))
+    rec = eng.meter.reconcile(batch=chunk)
+    z = eng._residuals.write_z()["z"]
+    # undrifted: single-sample rel err is noisy but centered; z is tight
+    assert float(np.abs(rec["rel_err"][~drifted]).mean()) < 0.2
+    assert float(np.abs(z[~drifted]).max()) < 3.5
+    # drifted: admissions far above the stationary law, positive sign
+    assert bool(np.all(rec["rel_err"][drifted] > 0.3))
+    assert bool(np.all(z[drifted] > 5.0))
+    # the alert channel caught every drifted stream and no undrifted one
+    alerted_rows = {eng.stream_row(s) for s in eng.residual_alerts()}
+    assert alerted_rows == set(np.flatnonzero(drifted))
+
+
+def test_residual_trigger_feeds_replanner():
+    """With ``residual_trigger`` the alert channel rows are unioned into
+    the re-plan trigger; on the acceptance fleet (where the statistics
+    tie) the closed loop still replans every drifted stream and the
+    decisions are annotated on the event log."""
+    traces, specs, cset = _drifted_fleet(m=4)
+    obs = Observability(ObsConfig(residual_alpha=0.05,
+                                  residual_trigger=True))
+    eng = _run(traces, specs, cset, obs=obs)
+    applied = {e.stream_id for e in eng.replan_events if e.applied}
+    assert applied == set(range(4))
+    decisions = [e for e in obs.tracer.events
+                 if e["name"] == "replan_decision"]
+    assert decisions and all("residual_triggered" in d["attrs"]
+                             for d in decisions)
+
+
+# ---------------------------------------------------------------------------
+# structured constraint report
+# ---------------------------------------------------------------------------
+
+def test_check_constraints_structured_report_and_events():
+    """An over-capacity hot tier yields a structured violation entry
+    (stream, tier, kind, signed margin) and an event on the obs log."""
+    rng = np.random.default_rng(2)
+    n, m, k = 1024, 3, 16
+    traces = rng.standard_normal((m, n)).astype(np.float32)
+    specs = [StreamSpec(stream_id=i, k=k, r=float(n)) for i in range(m)]
+    obs = Observability(ObsConfig())
+    eng = StreamEngine(specs, obs=obs)
+    sids = np.arange(m)
+    for t0 in range(0, n, 64):
+        eng.ingest(np.repeat(sids, 64), traces[:, t0:t0 + 64].reshape(-1),
+                   np.tile(np.arange(t0, t0 + 64), m))
+    eng.finalize()
+    # r = n puts every resident hot; cap hot at k/2 -> must violate
+    report = eng.check_constraints(
+        cons.ConstraintSet(cons.TierCapacity(0, k // 2)))
+    assert not report["ok"]
+    v = report["violations"][0]
+    assert v["kind"] == "capacity" and v["tier"] == 0
+    assert v["stream_id"] in set(range(m))
+    assert v["measured"] > v["limit"]
+    assert v["margin"] == pytest.approx(v["measured"] - v["limit"])
+    ev = [e for e in obs.tracer.events
+          if e["name"] == "constraint_violation"]
+    assert len(ev) == len(report["violations"])
+    assert ev[0]["attrs"]["kind"] == "capacity"
+
+
+# ---------------------------------------------------------------------------
+# jit probes, tracer, export, timers
+# ---------------------------------------------------------------------------
+
+def test_jit_probe_zero_recompiles_on_identical_solve():
+    """Repeating an identical fleet solve must be a 100% jit-cache hit:
+    the probe's miss counter stays flat across the second call."""
+    rng = np.random.default_rng(0)
+    m, t = 64, 3
+    args = (10.0 ** rng.uniform(-8, -3, (m, t)),
+            10.0 ** rng.uniform(-8, -3, (m, t)),
+            10.0 ** rng.uniform(-8, -3, (m, t)),
+            rng.integers(10_000, 50_000, m).astype(np.float64),
+            np.full(m, 64.0), np.ones(m))
+    shp.plan_ntier_arrays(*args)
+    p = jits.probe("shp_jax.plan").snapshot()
+    assert p["calls"] >= 1
+    before = p["misses"]
+    shp.plan_ntier_arrays(*args)
+    after = jits.probe("shp_jax.plan").snapshot()
+    assert after["misses"] == before
+    assert after["calls"] >= p["calls"] + 1
+    assert after["by_key"], "per-signature tallies must be kept"
+
+
+def test_replan_probe_tracks_solver():
+    traces, specs, cset = _drifted_fleet(m=3)
+    before = jits.probe("replan_device.solve").snapshot()["calls"]
+    _run(traces, specs, cset)
+    after = jits.probe("replan_device.solve").snapshot()
+    assert after["calls"] > before, "replans must route through the probe"
+
+
+def test_tracer_schema_and_jsonl_roundtrip(tmp_path):
+    tr = trace.Tracer(None)
+    with tr.span("outer", m=4) as attrs:
+        attrs["extra"] = np.int64(7)
+        tr.emit("point", x=1.5)
+    path = tr.write(str(tmp_path / "events.jsonl"))
+    recs = [json.loads(line) for line in open(path)]
+    assert [r["name"] for r in recs] == ["point", "outer"]
+    for r in recs:
+        assert r["v"] == 1 and set(r) >= {"kind", "name", "ts", "attrs"}
+    outer = recs[1]
+    assert outer["kind"] == "span" and outer["dur_s"] >= 0.0
+    assert outer["attrs"] == {"m": 4, "extra": 7}
+
+
+def test_prometheus_exposition_format():
+    snap = {"engines": {"engine0": {"engine": {"docs": 12, "rate": 0.5},
+                                    "tiers": [3, 4]}},
+            "skip": "strings are not exported"}
+    text = export.to_prometheus(snap, prefix="t")
+    lines = text.splitlines()
+    assert "# TYPE t_engines_engine0_engine_docs gauge" in lines
+    assert "t_engines_engine0_engine_docs 12" in lines
+    assert 't_engines_engine0_tiers{idx="0"} 3' in lines
+    assert not any("skip" in ln for ln in lines)
+
+
+def test_timers_disciplines():
+    import jax.numpy as jnp
+    us = timers.time_jax(lambda x: x + 1, jnp.zeros(8), reps=3)
+    assert us > 0.0
+    sec = timers.time_best(lambda: sum(range(100)), repeats=2)
+    assert sec >= 0.0
+    with timers.span("s") as sp:
+        pass
+    assert sp.dur_s >= 0.0

@@ -96,7 +96,45 @@ def run(emit):
                 repeats=2)
             emit(f"planner.three_tier_cap_slo_numpy_oracle.M{m}",
                  sec * 1e6, f"{m / sec:.0f} streams/s (host reference)")
+    _sharded_plan_rows(emit, rng)
     _run_online_resolve(emit, rng)
+
+
+def _sharded_plan_rows(emit, rng):
+    """Fleet-mesh scaling of the candidate-grid solve at the largest M:
+    the same solve single-device (L2-chunk thread fan-out) vs dispatched
+    per shard, emitted as a same-run ``.ref1``/``.sharded_dN`` pair for
+    the machine-honest ``run.py --check`` guard. Requires a multi-device
+    mesh (CI forces 8 CPU devices); silently absent otherwise."""
+    import jax
+    from repro.parallel import fleet
+    mesh = fleet.fleet_mesh(min(jax.local_device_count(), 8))
+    if mesh is None:
+        return
+    shards = fleet.n_shards(mesh)
+    m = SIZES[-1]
+    args = _ntier_arrays(rng, m, 3)
+
+    def base():
+        return shp.plan_ntier_arrays(*args)
+
+    def sharded():
+        with fleet.use_fleet_mesh(mesh):
+            return shp.plan_ntier_arrays(*args)
+
+    base(), sharded()  # compile both paths outside the timed rounds
+    key = f"sharded_d{shards}"
+    best = {"ref1": float("inf"), key: float("inf")}
+    for _ in range(4):  # interleaved best-of: same machine weather
+        best["ref1"] = min(best["ref1"], _time(base, repeats=1))
+        best[key] = min(best[key], _time(sharded, repeats=1))
+    sec = best["ref1"]
+    emit(f"planner.three_tier.M{m}.ref1", sec * 1e6,
+         f"{m / sec:.0f} streams/s single-device reference")
+    sec = best[key]
+    emit(f"planner.three_tier.M{m}.{key}", sec * 1e6,
+         f"{m / sec:.0f} streams/s on {shards} shards "
+         f"({best['ref1'] / sec:.2f}x vs same-run 1-device ref)")
 
 
 def _online_models(rng, r, t):

@@ -9,6 +9,7 @@ import argparse
 import json
 import os
 import platform
+import re
 import sys
 import time
 import traceback
@@ -21,6 +22,21 @@ import traceback
 GUARD_PREFIXES = ("planner.", "online.")
 GUARD_SUFFIXES = (".M64000", ".R256")
 CHECK_TOLERANCE = 0.30
+
+# fleet-mesh scaling rows (``<base>.sharded_dN`` / ``<base>.ref1``) are
+# guarded against their SAME-RUN single-device reference, never the
+# committed snapshot: forced CPU meshes only parallelize up to the
+# machine's real core count, so the floor is calibrated to it — the
+# acceptance 2x on a >=4-effective-core mesh, a soft fraction of the
+# effective parallelism below that (a 1-core box can't speed up at all;
+# the guard then only catches sharding that *destroys* throughput)
+_SHARDED_RE = re.compile(r"^(?P<base>.+)\.sharded_d(?P<d>\d+)$")
+SHARD_FLOOR_FULL = 2.0
+
+
+def shard_speedup_floor(devices: int) -> float:
+    eff = min(devices, os.cpu_count() or 1)
+    return SHARD_FLOOR_FULL if eff >= 4 else 0.45 * eff
 
 
 def _guarded(name: str) -> bool:
@@ -118,6 +134,30 @@ def check_regressions(fresh: dict, baseline_dir: str = ".",
                          "guarded": True, "status": "missing"}
                 regressions.append(entry)
                 diff.append(entry)
+        # fleet-mesh rows: same-run pairing against the .ref1 reference
+        by_name = {row["name"]: row for row in rows}
+        for row in rows:
+            match = _SHARDED_RE.match(row["name"])
+            if match is None:
+                continue
+            devices = int(match.group("d"))
+            floor = shard_speedup_floor(devices)
+            entry = {"name": row["name"], "us_new": row["us_per_call"],
+                     "guarded": True, "floor": floor,
+                     "effective_cores": min(devices, os.cpu_count() or 1)}
+            ref = by_name.get(match.group("base") + ".ref1")
+            if ref is None or not row["us_per_call"]:
+                entry["status"] = "missing_ref"
+                regressions.append(entry)
+            else:
+                speedup = ref["us_per_call"] / row["us_per_call"]
+                entry["us_ref1"] = ref["us_per_call"]
+                entry["speedup"] = speedup
+                entry["status"] = ("sharded_slow" if speedup < floor
+                                   else "ok")
+                if entry["status"] == "sharded_slow":
+                    regressions.append(entry)
+            diff.append(entry)
     path = write_trajectory("diff", diff, out_dir=out_dir)
     print(f"wrote {path} ({len(regressions)} guarded regression(s), "
           f"tolerance {tol:.0%})")
@@ -125,6 +165,14 @@ def check_regressions(fresh: dict, baseline_dir: str = ".",
         if entry["status"] == "missing":
             print(f"  MISSING guarded row {entry['name']} "
                   f"(committed {entry['us_committed']:.1f}us)")
+        elif entry["status"] == "missing_ref":
+            print(f"  MISSING same-run .ref1 reference for "
+                  f"{entry['name']}")
+        elif entry["status"] == "sharded_slow":
+            print(f"  SHARDED-SLOW {entry['name']}: "
+                  f"{entry['speedup']:.2f}x vs same-run ref, floor "
+                  f"{entry['floor']:.2f}x "
+                  f"({entry['effective_cores']} effective core(s))")
         else:
             print(f"  REGRESSION {entry['name']}: "
                   f"{entry['us_committed']:.1f}us -> "

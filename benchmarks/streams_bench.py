@@ -28,6 +28,10 @@ from repro.streams import engine
 K, BATCH = 16, 64
 SWEEP_M = (64, 256, 1024)
 DRIFT_M = (1024, 16384)
+# fleet-mesh scaling rows: (M, W) pairs; emitted only when jax sees a
+# multi-device mesh (CI forces 8 CPU devices via
+# XLA_FLAGS=--xla_force_host_platform_device_count=8)
+SHARD_SWEEP = ((65_536, 64), (1_000_000, 16))
 
 _time = timers.time_jax  # the shared device-dispatch discipline
 
@@ -66,6 +70,47 @@ def _engine_step_pair(emit, m, rng):
         emit(f"streams.engine_step{suffix}_m{m}_k{K}_b{BATCH}", us,
              f"{m * BATCH / us * 1e6:.0f} docs/s fleet step "
              f"({'device metrics on' if obs else 'telemetry off'})")
+
+
+def _sharded_step_rows(emit, rng):
+    """Fleet-axis scaling: the same jitted engine step, single-device vs
+    shard_map-ped over the mesh, on identical inputs — emitted as a
+    same-run pair (``.ref1`` / ``.sharded_dN``) so ``run.py --check``
+    can guard the speedup without cross-machine assumptions. Throughput
+    only; bit-identity is asserted in tests/test_sharded.py."""
+    from repro.parallel import fleet
+    mesh = fleet.fleet_mesh(min(jax.local_device_count(), 8))
+    if mesh is None:
+        return
+    shards = fleet.n_shards(mesh)
+    for m, w in SHARD_SWEEP:
+        reps, rounds = (10, 8) if m <= 100_000 else (2, 2)
+        step1 = engine._make_step(False, 512, update_path="auto")
+        stepd = engine._make_step(False, 512, update_path="auto",
+                                  mesh=mesh)
+        sc = rng.standard_normal((m, w)).astype(np.float32)
+        ids = np.tile(np.arange(w, dtype=np.int32), (m, 1))
+        st = engine.init(m, K)
+        sh = fleet.row_sharding(mesh)
+        variants = [
+            ("ref1", step1, ((st,), ((jnp.asarray(sc),
+                                      jnp.asarray(ids)),), (), ())),
+            (f"sharded_d{shards}", stepd,
+             (((fleet.shard_rows(mesh, st)),),
+              ((jax.device_put(sc, sh), jax.device_put(ids, sh)),),
+              (), ())),
+        ]
+        best = {name: float("inf") for name, _, _ in variants}
+        for _ in range(rounds):  # interleaved: same machine weather
+            for name, step, args in variants:
+                best[name] = min(best[name], _time(step, *args, reps=reps))
+        us1 = best["ref1"]
+        emit(f"streams.engine_step_m{m}_k{K}_b{w}.ref1", us1,
+             f"{m * w / us1 * 1e6:.0f} docs/s single-device reference")
+        usd = best[f"sharded_d{shards}"]
+        emit(f"streams.engine_step_m{m}_k{K}_b{w}.sharded_d{shards}", usd,
+             f"{m * w / usd * 1e6:.0f} docs/s on {shards} shards "
+             f"({us1 / usd:.2f}x vs same-run 1-device ref)")
 
 
 def run(emit):
@@ -122,6 +167,7 @@ def run(emit):
         emit(f"online.drift_update_m{m}", us,
              f"{m * BATCH / us * 1e6:.0f} docs/s detector "
              f"(M-batched {BATCH}-doc chunk stats)")
+    _sharded_step_rows(emit, rng)
 
 
 def main():

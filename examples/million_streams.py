@@ -1,0 +1,220 @@
+"""Million-stream sharded serving demo: plan, ingest, finalize one
+top-K retention window for 1M tenant streams with the fleet axis
+shard_map-ped across devices.
+
+Phases (all on a forced multi-device CPU mesh — no hardware needed):
+
+1. **Plan** — one sharded ``core.shp_jax`` candidate-grid solve over all
+   M streams' 3-tier cost arrays, then cross-shard water-filling
+   (``streams.planner.waterfill`` → psum bisection) of a fleet-shared
+   hot-tier budget, and a constrained sharded re-solve of only the
+   streams the budget actually binds.
+2. **Ingest** — a ``StreamEngine`` over the mesh: reservoir, metrics and
+   drift state live device-resident and row-sharded; chunks stream
+   through the async double-buffered ``ingest_chunks`` loop (chunk t+1's
+   host→device transfer overlaps chunk t's compute, buffers donated).
+3. **Finalize** — final top-K reads metered per stream; the obs
+   snapshot reports fleet-global (cross-shard aggregated) counters.
+
+Run:
+  PYTHONPATH=src python examples/million_streams.py [--streams 1000000]
+  PYTHONPATH=src python examples/million_streams.py --ci   # 64k, CI scale
+
+``--devices N`` forces an N-device CPU mesh via
+``--xla_force_host_platform_device_count`` (set before jax imports);
+``--devices 1`` runs the same window unsharded for comparison.
+"""
+import argparse
+import json
+import os
+import sys
+import time
+
+
+def _pre_parse_devices(argv):
+    """--devices must take effect before jax is imported."""
+    ap = argparse.ArgumentParser(add_help=False)
+    ap.add_argument("--devices", type=int, default=8)
+    args, _ = ap.parse_known_args(argv)
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "--xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + f" --xla_force_host_platform_device_count={args.devices}"
+        ).strip()
+    return args.devices
+
+
+_DEVICES = _pre_parse_devices(sys.argv[1:])
+
+import numpy as np  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.core import constraints as cons  # noqa: E402
+from repro.core import shp_jax  # noqa: E402
+from repro.obs import Observability, ObsConfig  # noqa: E402
+from repro.parallel import fleet  # noqa: E402
+from repro.streams import StreamEngine, StreamSpec, planner  # noqa: E402
+
+
+def fleet_cost_arrays(rng, m, n_docs, k):
+    """Per-stream 3-tier (hot/warm/cold) cost arrays: write-cheap
+    read-expensive hot tier, the reverse cold, jittered per stream so
+    the fleet plan is genuinely heterogeneous."""
+    jit = lambda lo, hi: rng.uniform(lo, hi, m)  # noqa: E731
+    cw = np.stack([jit(0.8, 1.2) * 1e-6, jit(0.8, 1.2) * 2e-5,
+                   jit(0.8, 1.2) * 8e-5], axis=1)
+    cr = np.stack([jit(0.8, 1.2) * 2.7e-4, jit(0.8, 1.2) * 4e-5,
+                   jit(0.8, 1.2) * 1e-6], axis=1)
+    cs = np.stack([jit(0.8, 1.2) * 2.5e-6, jit(0.8, 1.2) * 1e-6,
+                   jit(0.8, 1.2) * 2.5e-7], axis=1)
+    n = np.full(m, float(n_docs))
+    kv = np.full(m, float(k))
+    rpw = rng.uniform(0.5, 4.0, m)
+    return cw, cr, cs, n, kv, rpw
+
+
+def plan_phase(mesh, rng, m, n_docs, k, hot_frac):
+    """Sharded fleet plan + shared hot-tier water-filling."""
+    cw, cr, cs, n, kv, rpw = fleet_cost_arrays(rng, m, n_docs, k)
+    t0 = time.time()
+    with fleet.use_fleet_mesh(mesh):
+        plan = shp_jax.plan_ntier_arrays_jax(cw, cr, cs, n, kv, rpw)
+    t_solve = time.time() - t0
+    bounds, mig = plan["bounds"], plan["migrate"]
+    desired = cons.peak_occupancy_arrays(bounds, n, kv, mig)[:, 0]
+    budget = float(desired.sum()) * hot_frac
+    t0 = time.time()
+    grants = planner.waterfill(desired, budget, mesh=mesh)
+    t_wf = time.time() - t0
+    binding = grants < desired - 1e-9
+    t0 = time.time()
+    if binding.any():
+        idx = np.flatnonzero(binding)
+        cap = np.full((idx.size, 3), np.inf)
+        cap[:, 0] = grants[idx]
+        with fleet.use_fleet_mesh(mesh):
+            re = shp_jax.plan_ntier_arrays_jax(
+                cw[idx], cr[idx], cs[idx], n[idx], kv[idx], rpw[idx],
+                cap=cap)
+        bounds = bounds.copy()
+        mig = mig.copy()
+        bounds[idx] = re["bounds"]
+        mig[idx] = re["migrate"]
+    t_resolve = time.time() - t0
+    hot_occ = cons.peak_occupancy_arrays(bounds, n, kv, mig)[:, 0]
+    assert hot_occ.sum() <= budget * (1 + 1e-9) + 1e-6, \
+        "hot-tier budget oversubscribed after re-solve"
+    return {
+        "bounds": bounds, "migrate": mig,
+        "stats": {
+            "solve_s": round(t_solve, 3),
+            "waterfill_s": round(t_wf, 3),
+            "resolve_s": round(t_resolve, 3),
+            "binding_streams": int(binding.sum()),
+            "hot_budget_docs": budget,
+            "hot_peak_docs": float(hot_occ.sum()),
+        },
+    }
+
+
+def dense_chunks(rng, m, w, n_chunks):
+    """Generator of ingest_dense-shaped chunks (one uniform-K bucket):
+    produced lazily so chunk t+1's materialization and host→device copy
+    overlap chunk t's sharded step."""
+    for c in range(n_chunks):
+        sc = rng.standard_normal((m, w)).astype(np.float32)
+        ids = np.tile(np.arange(c * w, (c + 1) * w, dtype=np.int32),
+                      (m, 1))
+        yield [(sc, ids)]
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--devices", type=int, default=8)
+    ap.add_argument("--streams", type=int, default=1_000_000)
+    ap.add_argument("--docs", type=int, default=256,
+                    help="docs per stream in the window")
+    ap.add_argument("--chunk", type=int, default=16,
+                    help="docs per stream per ingest chunk")
+    ap.add_argument("--topk", type=int, default=8)
+    ap.add_argument("--hot-frac", type=float, default=0.6,
+                    help="fleet-shared hot-tier budget as a fraction of "
+                         "the unconstrained plan's hot occupancy")
+    ap.add_argument("--meter", action="store_true",
+                    help="keep the per-stream host ledgers during ingest "
+                         "(the default is pure-throughput: device metrics "
+                         "only, ledgers at finalize)")
+    ap.add_argument("--ci", action="store_true",
+                    help="CI scale: 64k streams")
+    ap.add_argument("--out", default="bench_out/million_streams.json")
+    args = ap.parse_args()
+    if args.ci:
+        args.streams = min(args.streams, 64_000)
+
+    mesh = fleet.fleet_mesh(args.devices) if args.devices > 1 else None
+    shards = fleet.n_shards(mesh)
+    m, k = args.streams, args.topk
+    print(f"{m} streams on {jax.local_device_count()} devices "
+          f"({shards} shards)")
+    rng = np.random.default_rng(0)
+
+    # --- phase 1: sharded plan + cross-shard water-filling ---------------
+    plan = plan_phase(mesh, rng, m, args.docs, k, args.hot_frac)
+    st = plan["stats"]
+    print(f"plan: solve {st['solve_s']}s, waterfill {st['waterfill_s']}s, "
+          f"re-solve of {st['binding_streams']} binding streams "
+          f"{st['resolve_s']}s; hot occupancy {st['hot_peak_docs']:.0f} "
+          f"<= budget {st['hot_budget_docs']:.0f}")
+
+    # --- phase 2: sharded double-buffered ingest -------------------------
+    t0 = time.time()
+    specs = [StreamSpec(stream_id=i, k=k, boundaries=bt, migrate=bool(mg))
+             for i, (bt, mg) in enumerate(zip(
+                 map(tuple, plan["bounds"]), plan["migrate"]))]
+    obs = Observability(ObsConfig(residuals=False))
+    eng = StreamEngine(specs, obs=obs, mesh=mesh)
+    t_build = time.time() - t0
+    n_chunks = args.docs // args.chunk
+    t0 = time.time()
+    done = eng.ingest_chunks(
+        dense_chunks(rng, m, args.chunk, n_chunks), meter=args.meter)
+    t_ingest = time.time() - t0
+    docs = m * args.chunk * done
+    print(f"ingest: {done} chunks, {docs / 1e6:.1f}M docs in "
+          f"{t_ingest:.2f}s ({docs / t_ingest / 1e6:.2f}M docs/s)")
+
+    # --- phase 3: finalize + fleet-global obs ----------------------------
+    t0 = time.time()
+    for bi, b in enumerate(eng.buckets):
+        eng.meter.record_reads(eng._global_rows[bi],
+                               np.asarray(eng._states[bi].ids)[:b.m])
+    t_final = time.time() - t0
+    snap = eng.obs_snapshot()
+    em = snap["engine"]
+    assert em["docs"] == docs, (em["docs"], docs)
+    assert int(eng.meter.reads.sum()) == m * k
+    print(f"finalize: {t_final:.2f}s; fleet-global obs: "
+          f"docs={em['docs']} admits={em['admits']} "
+          f"evictions={em['evictions']} chunks={em['chunks']}")
+
+    out = {
+        "streams": m, "devices": jax.local_device_count(),
+        "shards": shards, "docs_per_stream": args.docs,
+        "chunk": args.chunk, "topk": k,
+        "plan": st,
+        "engine_build_s": round(t_build, 3),
+        "ingest_s": round(t_ingest, 3),
+        "ingest_docs_per_s": round(docs / t_ingest, 1),
+        "finalize_s": round(t_final, 3),
+        "obs_engine": em,
+        "meter": snap["meter"],
+    }
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -14,26 +14,50 @@ batched ``repro.streams`` engine — the heterogeneous fleet is planned in a
 few vectorized passes and every scored batch advances all tenants inside
 one jitted step.
 
+``--mesh N`` shards the tenant fleet axis across N forced CPU devices
+(``repro.parallel``): the engine step, metrics, and planner solves then
+run shard_map-ped, and ``--obs-out`` artifacts report the cross-shard
+aggregated counters.
+
 Run: PYTHONPATH=src python examples/serve_topk.py [--requests 64]
 """
 import argparse
+import os
+import sys
 import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro import configs
-from repro.core import costs, placement, shp, tiers
-from repro.data.curation import TopKCurator
-from repro.models import lm
+def _pre_parse_mesh(argv):
+    """--mesh must force the device count before jax is imported."""
+    ap = argparse.ArgumentParser(add_help=False)
+    ap.add_argument("--mesh", type=int, default=1)
+    args, _ = ap.parse_known_args(argv)
+    flags = os.environ.get("XLA_FLAGS", "")
+    if (args.mesh > 1
+            and "--xla_force_host_platform_device_count" not in flags):
+        os.environ["XLA_FLAGS"] = (
+            flags + f" --xla_force_host_platform_device_count={args.mesh}"
+        ).strip()
+
+
+_pre_parse_mesh(sys.argv[1:])
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro import configs  # noqa: E402
+from repro.core import costs, placement, shp, tiers  # noqa: E402
+from repro.data.curation import TopKCurator  # noqa: E402
+from repro.models import lm  # noqa: E402
 
 
 def make_tenant_engine(tenants: int, requests: int, topk: int, doc_gb: float,
-                       obs=None):
+                       obs=None, mesh=None):
     """Heterogeneous per-tenant retention: K alternates, cost models jitter
     the HBM presets, every third tenant gets a 3-tier HBM → DRAM → disk
-    topology, and the fleet planner picks each tenant's boundary vector."""
+    topology, and the fleet planner picks each tenant's boundary vector.
+    With ``mesh`` the tenant axis shards across it (``repro.parallel``)."""
     from repro.core import topology
     from repro.streams import StreamEngine, StreamSpec
     # ceil: when tenants doesn't divide requests, the first tenants get one
@@ -53,7 +77,7 @@ def make_tenant_engine(tenants: int, requests: int, topk: int, doc_gb: float,
             cm = costs.hbm_host_preset(n_docs=n_per, k=k, doc_gb=doc_gb,
                                        window_seconds=window)
         specs.append(StreamSpec(stream_id=t, k=k, cost_model=cm))
-    return StreamEngine(specs, obs=obs), specs
+    return StreamEngine(specs, obs=obs, mesh=mesh), specs
 
 
 def main():
@@ -75,7 +99,19 @@ def main():
                     help="enable the repro.obs telemetry layer and write "
                          "metrics.json / metrics.prom (Prometheus text "
                          "exposition) / events.jsonl artifacts to DIR")
+    ap.add_argument("--mesh", type=int, default=1,
+                    help="shard the tenant fleet across an N-device CPU "
+                         "mesh (forced via XLA_FLAGS before jax loads); "
+                         "requires --tenants > 1")
     args = ap.parse_args()
+
+    mesh = None
+    if args.mesh > 1:
+        if args.tenants <= 1:
+            raise SystemExit("--mesh requires --tenants > 1")
+        from repro.parallel import fleet
+        mesh = fleet.fleet_mesh(args.mesh)
+        print(f"fleet mesh: {args.mesh} devices, tenant axis sharded")
 
     obs = None
     if args.obs_out is not None:
@@ -90,7 +126,8 @@ def main():
     curator = engine = None
     if args.tenants > 1:
         engine, tenant_specs = make_tenant_engine(
-            args.tenants, args.requests, args.topk, doc_gb, obs=obs)
+            args.tenants, args.requests, args.topk, doc_gb, obs=obs,
+            mesh=mesh)
         print(f"multi-tenant retention: {args.tenants} streams, "
               f"fleet plan {engine.plan.strategy_histogram()}")
     else:

@@ -104,6 +104,27 @@ def peak_occupancy_suffix(bounds, n, k, observed_hwm) -> np.ndarray:
     return np.maximum(analytic, np.asarray(observed_hwm, np.float64))
 
 
+def waterfill_grants(desired, budget: float) -> np.ndarray:
+    """Water-filling split of a fleet-shared budget: each stream is
+    granted ``min(desired_i, λ)`` with the water level λ chosen so the
+    grants sum to the budget (everything granted when the desires
+    already fit). Exact λ via one sort + prefix scan over the fleet —
+    the single-host view. Sharded fleets compute the same λ without
+    gathering via ``parallel.fleet.waterfill_sharded`` (psum bisection);
+    ``streams.planner.waterfill`` dispatches between the two."""
+    d = np.asarray(desired, np.float64)
+    if d.sum() <= budget:
+        return d.copy()
+    order = np.sort(d)
+    m = order.shape[0]
+    prefix = np.concatenate([[0.0], np.cumsum(order)])
+    # smallest j where filling everyone above order[j] to order[j] overflows
+    fill_at = prefix[:-1] + order * (m - np.arange(m))
+    j = int(np.searchsorted(fill_at, budget, side="right"))
+    lam = (budget - prefix[j]) / max(m - j, 1)
+    return np.minimum(d, max(lam, 0.0))
+
+
 def expected_read_latency(bounds, n: float, latencies, migrate: bool) -> float:
     """Expected per-survivor read latency at window end.
 

@@ -674,6 +674,15 @@ def plan_ntier_arrays_jax(cw, cr, cs, n, k, rpw, *, cap=None, lat=None,
              lat_h.astype(np_dtype, copy=False),
              slo_h.astype(np_dtype, copy=False)]
 
+    # active fleet mesh (parallel.fleet): shard the M axis across devices
+    # and run the solve per shard — replaces the L2-chunk host thread
+    # fan-out below, which stays the single-device fallback
+    from repro.parallel import fleet as fleet_mod
+    mesh = fleet_mod.get_fleet_mesh()
+    if mesh is not None and fleet_mod.n_shards(mesh) > 1:
+        return _plan_sharded(args, m, t, mesh, constrained, capfin,
+                             slo_any, use_pallas, precision)
+
     def _chunk_args(lo_i):
         hi_i = min(lo_i + chunk, m)
         part = [a[lo_i:hi_i] for a in args]
@@ -705,6 +714,63 @@ def plan_ntier_arrays_jax(cw, cr, cs, n, k, rpw, *, cap=None, lat=None,
         outs = [_solve(starts[0])]
     val, bounds, mig = (np.concatenate([o[i] for o in outs])
                         for i in range(3))
+    total = np.asarray(val, np.float64)[:m]
+    bounds = np.asarray(bounds, np.float64)[:m]
+    mig = np.asarray(mig)[:m]
+    feas = np.isfinite(total)
+    return {"total": total,
+            "bounds": np.where(feas[:, None], bounds, 0.0),
+            "migrate": mig & feas}
+
+
+# ---------------------------------------------------------------------------
+# Fleet-mesh dispatch: shard_map the M axis instead of thread fan-out
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _plan_sharded_fn(mesh, t, constrained, capfin, slo_any, use_pallas):
+    """One jitted ``shard_map`` of ``_plan_impl`` per (mesh, static-key):
+    every input splits row-wise along the fleet axis and each shard runs
+    the identical single-device program on its rows — no collectives, so
+    sharded plans are bit-identical to the fallback path's."""
+    from repro.parallel import fleet as fleet_mod
+    fn = functools.partial(_plan_impl, t=t, constrained=constrained,
+                           capfin=capfin, slo_any=slo_any,
+                           use_pallas=use_pallas)
+    spec = fleet_mod.row_spec()
+    return jax.jit(fleet_mod.shard_map(
+        fn, mesh=mesh, in_specs=(spec,) * 9,
+        out_specs=(spec, spec, spec), check_rep=False))
+
+
+def _plan_sharded(args, m, t, mesh, constrained, capfin, slo_any,
+                  use_pallas, precision):
+    """Mesh path of ``plan_ntier_arrays_jax``: pad M to shards × a
+    power-of-two per-shard block (bounding the jit cache exactly like
+    the chunked path), stage the inputs row-sharded, and solve all
+    shards in one XLA dispatch."""
+    from repro.obs import jits as obs_jits
+    from repro.parallel import fleet as fleet_mod
+    shards = fleet_mod.n_shards(mesh)
+    per = _pad_pow2(-(-m // shards))
+    mp = per * shards
+
+    def _padr(a):
+        if mp > m:
+            a = np.concatenate(
+                [a, np.broadcast_to(a[:1], (mp - m,) + a.shape[1:])])
+        return a
+
+    fn = _plan_sharded_fn(mesh, t, constrained, capfin, slo_any,
+                          use_pallas)
+    probe = obs_jits.probe("shp_jax.plan_sharded")
+    key = (obs_jits.mesh_key(mesh), t, constrained, capfin, slo_any,
+           use_pallas, per, precision)
+    sh = fleet_mod.row_sharding(mesh)
+    with enable_x64(precision == "float64"):
+        dev = [jax.device_put(_padr(a), sh) for a in args]
+        out = probe.track(fn, *dev, key=key)
+        val, bounds, mig = (np.asarray(o) for o in out)
     total = np.asarray(val, np.float64)[:m]
     bounds = np.asarray(bounds, np.float64)[:m]
     mig = np.asarray(mig)[:m]

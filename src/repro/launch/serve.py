@@ -5,7 +5,10 @@ entropy) request retention across the tiered store — the paper's workflow
 with the serving fleet as producer. Reduced configs on CPU; same entry
 point under the production mesh on hardware. ``--tenants M`` switches
 retention to the multi-tenant ``repro.streams`` fleet engine (one jitted
-step advances all M tenant reservoirs).
+step advances all M tenant reservoirs); ``--mesh N`` shards that tenant
+axis across an N-device mesh (forced CPU devices off-hardware) — the
+``--obs-out`` artifacts then carry the cross-shard aggregated counters,
+never one shard's block.
 """
 from __future__ import annotations
 
@@ -22,6 +25,10 @@ def main():
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--tenants", type=int, default=1,
                     help=">1 = multi-tenant retention via repro.streams")
+    ap.add_argument("--mesh", type=int, default=1,
+                    help="shard the tenant fleet across an N-device mesh "
+                         "(requires --tenants > 1); forces N CPU devices "
+                         "in the child before jax loads")
     ap.add_argument("--obs-out", default=None, metavar="DIR",
                     help="enable repro.obs telemetry and write the "
                          "metrics.json / metrics.prom / events.jsonl "
@@ -35,9 +42,21 @@ def main():
     cmd = [sys.executable, script, "--arch", args.arch,
            "--requests", str(args.requests), "--batch", str(args.batch),
            "--tenants", str(args.tenants)]
+    env = dict(os.environ)
+    if args.mesh > 1:
+        cmd += ["--mesh", str(args.mesh)]
+        # the child pre-parses --mesh too, but only appends the flag when
+        # absent — setting it here keeps the two in agreement even if the
+        # parent environment already forces a different count
+        flags = env.get("XLA_FLAGS", "")
+        if "--xla_force_host_platform_device_count" not in flags:
+            env["XLA_FLAGS"] = (
+                flags
+                + f" --xla_force_host_platform_device_count={args.mesh}"
+            ).strip()
     if args.obs_out is not None:
         cmd += ["--obs-out", args.obs_out]
-    raise SystemExit(subprocess.call(cmd + extra))
+    raise SystemExit(subprocess.call(cmd + extra, env=env))
 
 
 if __name__ == "__main__":

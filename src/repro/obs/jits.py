@@ -94,6 +94,18 @@ class JitProbe:
             self.by_key.clear()
 
 
+def mesh_key(mesh) -> tuple:
+    """Canonical mesh-shape component for probe keys: ``((axis, size),
+    ...)`` or ``()`` without a mesh. The sharded planner entry points
+    (``shp_jax.plan_sharded``, ``replan_device.solve_sharded``) prefix
+    their ``(T, constraint-signature)`` keys with this, so compile
+    storms stay attributable per mesh shape."""
+    if mesh is None:
+        return ()
+    return tuple((str(a), int(s))
+                 for a, s in zip(mesh.axis_names, mesh.devices.shape))
+
+
 def probe(name: str) -> JitProbe:
     """Get-or-create the named probe."""
     with _REGISTRY_LOCK:

@@ -30,15 +30,47 @@ DOCS, ADMITS, EVICTIONS, BAR_CANDIDATES, BAR_PASSES, CHUNKS, DRIFT_FIRED = \
 
 
 class MetricsState(NamedTuple):
-    """Fleet-level counters, accumulated on device."""
+    """Fleet-level counters, accumulated on device.
 
-    counts: jax.Array  # (7,) i32 — see the slot constants above
-    drift_score_max: jax.Array  # () f32 — max normalized drift score seen
+    Under a fleet mesh (``StreamEngine(mesh=...)``) the leaves carry a
+    leading shard axis — counts ``(D, 7)``, score ``(D,)`` — split
+    across the mesh so each device accumulates its own block inside the
+    sharded step with **no collectives on the hot path**; ``snapshot``
+    aggregates across shards (integer sums are exact, so fleet-global
+    counts are identical to the single-device run's)."""
+
+    counts: jax.Array  # (7,) i32 — or (D, 7) sharded; see slots above
+    drift_score_max: jax.Array  # () f32 — or (D,) sharded
+
+    @property
+    def sharded(self) -> bool:
+        return getattr(self.counts, "ndim", 1) == 2
 
 
-def init() -> MetricsState:
+def init(shards: int = 0) -> MetricsState:
+    """``shards > 0`` builds the sharded layout (one counter block per
+    mesh device); the caller places it with the fleet row sharding."""
+    if shards:
+        return MetricsState(counts=jnp.zeros((shards, 7), jnp.int32),
+                            drift_score_max=jnp.zeros((shards,),
+                                                      jnp.float32))
     return MetricsState(counts=jnp.zeros((7,), jnp.int32),
                         drift_score_max=jnp.zeros((), jnp.float32))
+
+
+def shard_local(ms: MetricsState) -> MetricsState:
+    """Inside ``shard_map``: squeeze this shard's (1, 7)/(1,) block to
+    the flat single-device layout so every accumulate_* law applies
+    unchanged."""
+    return MetricsState(counts=ms.counts[0],
+                        drift_score_max=ms.drift_score_max[0])
+
+
+def shard_pack(ms: MetricsState) -> MetricsState:
+    """Inverse of ``shard_local``: re-add the leading shard axis before
+    the sharded step returns its block."""
+    return MetricsState(counts=ms.counts[None],
+                        drift_score_max=ms.drift_score_max[None])
 
 
 def accumulate_bucket(ms: MetricsState, batch_scores, batch_ids, bar,
@@ -79,9 +111,22 @@ def bump_chunk(ms: MetricsState) -> MetricsState:
 
 
 def snapshot(ms: MetricsState) -> dict:
-    """Drain the device counters to host scalars (the only sync point)."""
+    """Drain the device counters to host scalars (the only sync point).
+
+    Sharded states are aggregated here — the cross-shard sum (max for
+    the drift score; every shard bumps CHUNKS once per step, so chunks
+    take one shard's count) runs on device before the single transfer,
+    so ``obs_snapshot``/Prometheus always report *fleet-global* counts,
+    never one shard's block."""
     import numpy as np
-    c = np.asarray(ms.counts)
+    if ms.sharded:
+        chunks = int(np.asarray(ms.counts[:, CHUNKS].max()))
+        c = np.asarray(ms.counts.sum(axis=0))
+        score = float(np.asarray(ms.drift_score_max.max()))
+    else:
+        c = np.asarray(ms.counts)
+        chunks = int(c[CHUNKS])
+        score = float(np.asarray(ms.drift_score_max))
     cand, passes = int(c[BAR_CANDIDATES]), int(c[BAR_PASSES])
     return {
         "docs": int(c[DOCS]),
@@ -90,7 +135,7 @@ def snapshot(ms: MetricsState) -> dict:
         "bar_candidates": cand,
         "bar_passes": passes,
         "filter_pass_rate": passes / cand if cand else 0.0,
-        "chunks": int(c[CHUNKS]),
-        "drift_score_max": float(np.asarray(ms.drift_score_max)),
+        "chunks": chunks,
+        "drift_score_max": score,
         "drift_fired": int(c[DRIFT_FIRED]),
     }

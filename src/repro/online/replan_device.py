@@ -276,6 +276,21 @@ def _solve_jit(cw, cr, cs, n, k, rpw, cap, lat, slo, n0, rho, b0, *, t,
                        slo_any=slo_any, allow_moves=allow_moves)
 
 
+@functools.lru_cache(maxsize=None)
+def _solve_sharded_fn(mesh, t, constrained, capfin, slo_any, allow_moves):
+    """Jitted ``shard_map`` of ``_solve_impl`` over the fleet axis: each
+    shard runs the identical single-device suffix re-solve on its rows
+    (no collectives), so sharded totals/bounds are bit-identical."""
+    from repro.parallel import fleet as fleet_mod
+    fn = functools.partial(_solve_impl, t=t, constrained=constrained,
+                           capfin=capfin, slo_any=slo_any,
+                           allow_moves=allow_moves)
+    spec = fleet_mod.row_spec()
+    return jax.jit(fleet_mod.shard_map(
+        fn, mesh=mesh, in_specs=(spec,) * 12,
+        out_specs=(spec, spec, spec), check_rep=False))
+
+
 def solve_group(cw, cr, cs, n, k, rpw, cap, lat, slo, n0, rho, b0, *,
                 allow_moves=True):
     """Device re-solve of one uniform-tier-count drift-flagged group.
@@ -289,7 +304,18 @@ def solve_group(cw, cr, cs, n, k, rpw, cap, lat, slo, n0, rho, b0, *,
     capfin = tuple(bool(np.any(np.isfinite(np.asarray(cap)[:, j])))
                    for j in range(t))
     slo_any = bool(np.any(np.isfinite(np.asarray(slo))))
-    rp = 1 << max(r - 1, 3).bit_length()
+    # active fleet mesh: split R across shards, each padded to a
+    # power-of-two block (same jit-cache bound, one signature per
+    # (mesh, per-shard-R) instead of per total R)
+    from repro.obs import jits as obs_jits
+    from repro.parallel import fleet as fleet_mod
+    mesh = fleet_mod.get_fleet_mesh()
+    shards = fleet_mod.n_shards(mesh)
+    if shards > 1:
+        per = 1 << max(-(-r // shards) - 1, 3).bit_length()
+        rp = per * shards
+    else:
+        rp = 1 << max(r - 1, 3).bit_length()
 
     def _pad(x):
         x = np.asarray(x, np.float64)
@@ -302,13 +328,23 @@ def solve_group(cw, cr, cs, n, k, rpw, cap, lat, slo, n0, rho, b0, *,
                               rho, b0)]
     # jit-cache probe (repro.obs.jits): one compiled signature per
     # (T, constraint-signature, padded-R) static key
-    from repro.obs import jits as obs_jits
-    probe = obs_jits.probe("replan_device.solve")
-    key = (t, constrained, capfin, slo_any, bool(allow_moves), rp)
     with enable_x64():
-        total, bounds, cost_old = probe.track(
-            _solve_jit, *args, key=key, t=t, constrained=constrained,
-            capfin=capfin, slo_any=slo_any, allow_moves=bool(allow_moves))
+        if shards > 1:
+            fn = _solve_sharded_fn(mesh, t, constrained, capfin, slo_any,
+                                   bool(allow_moves))
+            probe = obs_jits.probe("replan_device.solve_sharded")
+            key = (obs_jits.mesh_key(mesh), t, constrained, capfin,
+                   slo_any, bool(allow_moves), per)
+            sh = fleet_mod.row_sharding(mesh)
+            dev = [jax.device_put(a, sh) for a in args]
+            total, bounds, cost_old = probe.track(fn, *dev, key=key)
+        else:
+            probe = obs_jits.probe("replan_device.solve")
+            key = (t, constrained, capfin, slo_any, bool(allow_moves), rp)
+            total, bounds, cost_old = probe.track(
+                _solve_jit, *args, key=key, t=t, constrained=constrained,
+                capfin=capfin, slo_any=slo_any,
+                allow_moves=bool(allow_moves))
         total = np.asarray(total, np.float64)[:r]
         bounds = np.asarray(bounds, np.float64)[:r]
         cost_old = np.asarray(cost_old, np.float64)[:r]

@@ -1,1 +1,1 @@
-from . import ctx, sharding  # noqa: F401
+from . import ctx, fleet, sharding  # noqa: F401

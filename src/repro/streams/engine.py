@@ -140,7 +140,7 @@ def evicted_ids(old: BatchedReservoirState,
 
 def _make_step(use_kernel_filter: bool, block_n: int, drift_cfg=None,
                bucket_ks: Tuple[int, ...] = (), update_path: str = "auto",
-               with_metrics: bool = False):
+               with_metrics: bool = False, mesh=None, donate: bool = False):
     """One jitted step over ALL buckets: states/batches are same-length
     tuples (the pytree structure is static, so the whole fleet advances in
     a single XLA computation). With ``drift_cfg`` (online re-planning) the
@@ -161,6 +161,18 @@ def _make_step(use_kernel_filter: bool, block_n: int, drift_cfg=None,
     over values the step already materializes, fused into the same XLA
     program; when off, ``mstate`` is an empty tuple and the traced
     computation is exactly the pre-obs step (bit-identical outputs).
+
+    With ``mesh`` (a ``parallel.fleet`` mesh) the whole step is
+    ``shard_map``-ped over the fleet axis: every leading-M leaf —
+    reservoir state, batch, drift state — splits across devices and each
+    shard runs the exact single-device program on its rows (every update
+    is row-independent, so sharded outputs are bit-identical; tests
+    assert it). The metrics state keeps one counter block per shard
+    (aggregated at snapshot), so the step stays collective-free.
+    ``donate`` builds the double-buffered ingestion variant: the previous
+    chunk's state/drift/metrics buffers are donated to XLA, letting the
+    outputs reuse them while the next chunk's host→device copy is in
+    flight (``StreamEngine.ingest_chunks``).
     """
     if drift_cfg is not None:
         from repro.online import drift as drift_mod
@@ -170,6 +182,10 @@ def _make_step(use_kernel_filter: bool, block_n: int, drift_cfg=None,
         raise ValueError(f"unknown update_path {update_path!r}")
 
     def step(states, batches, dstates, mstate):
+        if with_metrics and mesh is not None:
+            # inside shard_map: squeeze this shard's (1, 7) counter
+            # block to the flat layout the accumulate laws expect
+            mstate = metrics_mod.shard_local(mstate)
         new_states, wrotes, evs, new_dstates = [], [], [], []
         for bi, (st, (s, i)) in enumerate(zip(states, batches)):
             wide = s.shape[1] >= st.scores.shape[1]
@@ -200,10 +216,19 @@ def _make_step(use_kernel_filter: bool, block_n: int, drift_cfg=None,
                 mstate = metrics_mod.accumulate_drift(mstate, score_max,
                                                       fired)
             mstate = metrics_mod.bump_chunk(mstate)
+        if with_metrics and mesh is not None:
+            mstate = metrics_mod.shard_pack(mstate)
         return tuple(new_states), tuple(wrotes), tuple(evs), \
             tuple(new_dstates), mstate
 
-    return jax.jit(step)
+    if mesh is not None:
+        from repro.parallel import fleet
+        spec = fleet.row_spec()
+        step = fleet.shard_map(step, mesh=mesh,
+                               in_specs=(spec, spec, spec, spec),
+                               out_specs=(spec, spec, spec, spec, spec),
+                               check_rep=False)
+    return jax.jit(step, donate_argnums=(0, 2, 3) if donate else ())
 
 
 # ---------------------------------------------------------------------------
@@ -280,9 +305,20 @@ class StreamEngine:
     def __init__(self, specs: Sequence[StreamSpec], *,
                  use_kernel_filter: bool = False, block_n: int = 512,
                  constraints=None, replan=None, update_path: str = "auto",
-                 obs=None):
+                 obs=None, mesh=None):
         if not specs:
             raise ValueError("need at least one stream")
+        # fleet-axis sharding (parallel.fleet): with a >=2-device mesh
+        # every per-bucket state splits row-wise across devices, the
+        # jitted step runs shard_map-ped, and the planner entry points
+        # below dispatch per shard; a 1-device mesh is the plain path
+        self._shards = 1
+        if mesh is not None:
+            from repro.parallel import fleet
+            self._shards = fleet.n_shards(mesh)
+            if self._shards < 2:
+                mesh, self._shards = None, 1
+        self.mesh = mesh
         by_id = {s.stream_id: s for s in specs}
         if len(by_id) != len(specs):
             raise ValueError("duplicate stream ids")
@@ -306,11 +342,11 @@ class StreamEngine:
                 with self._tracer.span("plan", streams=len(planned)):
                     plan = planner.plan_fleet_mixed(
                         [s.cost_model for s in planned],
-                        constraints=constraints)
+                        constraints=constraints, mesh=mesh)
             else:
                 plan = planner.plan_fleet_mixed(
                     [s.cost_model for s in planned],
-                    constraints=constraints)
+                    constraints=constraints, mesh=mesh)
             bad = [s.stream_id for i, s in enumerate(planned)
                    if not plan.feasible(i)]
             if bad:
@@ -350,8 +386,18 @@ class StreamEngine:
             offset += b.m
         self._sid_of_row = {row: sid for sid, row in self._row_of.items()}
         self.meter = metering.FleetMeter(ks, migrate=migs, boundaries=bounds)
+        # sharded buckets pad their row count to a multiple of the shard
+        # count; pad rows carry (-inf, -1, seen=0) reservoirs and all-pad
+        # batches, which every law (update, drift, metrics) treats as
+        # inert — host-facing reads slice back to the true m
+        self._pad_m: List[int] = [
+            (-(-b.m // self._shards)) * self._shards for b in self.buckets]
         self._states: List[BatchedReservoirState] = [
-            init(b.m, b.k) for b in self.buckets]
+            init(pm, b.k) for pm, b in zip(self._pad_m, self.buckets)]
+        if mesh is not None:
+            from repro.parallel import fleet
+            self._states = [fleet.shard_rows(mesh, st)
+                            for st in self._states]
         # online re-planning: drift detector inside the jitted step,
         # boundary deltas applied between chunks (repro.online)
         self.replan_config = replan
@@ -372,24 +418,36 @@ class StreamEngine:
             self._replanner = Replanner(
                 [self._model_of_row.get(row) for row in range(self.m)],
                 constraints=cset_arg, config=replan)
-            self._drift_states = [drift_mod.init(b.m) for b in self.buckets]
+            self._drift_states = [drift_mod.init(pm) for pm in self._pad_m]
+            if mesh is not None:
+                from repro.parallel import fleet
+                self._drift_states = [fleet.shard_rows(mesh, ds)
+                                      for ds in self._drift_states]
         self._metrics_state = None
         self._residuals = None
         if obs is not None:
             if obs.config.metrics:
                 from repro.obs import metrics as metrics_mod
-                self._metrics_state = metrics_mod.init()
+                self._metrics_state = metrics_mod.init(
+                    shards=self._shards if mesh is not None else 0)
+                if mesh is not None:
+                    from repro.parallel import fleet
+                    self._metrics_state = fleet.shard_rows(
+                        mesh, self._metrics_state)
             if obs.config.residuals:
                 from repro.obs.residuals import ResidualMonitor
                 self._residuals = ResidualMonitor(
                     self.meter.ks, alpha=obs.config.residual_alpha,
                     max_checks=obs.config.residual_max_checks)
-        self._step = _make_step(
+        self._step_factory = lambda donate: _make_step(
             use_kernel_filter, block_n,
             drift_cfg=None if replan is None else replan.drift,
             bucket_ks=tuple(b.k for b in self.buckets),
             update_path=update_path,
-            with_metrics=self._metrics_state is not None)
+            with_metrics=self._metrics_state is not None,
+            mesh=mesh, donate=donate)
+        self._step = self._step_factory(False)
+        self._donating_step = None  # built lazily by ingest_chunks
 
     @property
     def m(self) -> int:
@@ -415,24 +473,68 @@ class StreamEngine:
 
     def _ingest(self, stream_ids, scores, doc_ids, pad_to) -> None:
         routed = self.router.route(stream_ids, scores, doc_ids, pad_to=pad_to)
-        batches = tuple((jnp.asarray(s), jnp.asarray(i)) for s, i in routed)
+        self._run_chunk(routed)
+
+    def _stage_batches(self, dense) -> tuple:
+        """Host dense per-bucket (scores, ids) pairs → device batches:
+        plain ``jnp.asarray`` single-device, or row-padded + fleet-
+        sharded ``device_put`` under a mesh (the transfer is async, which
+        is what ``ingest_chunks`` overlaps with the previous compute)."""
+        if self.mesh is None:
+            return tuple((jnp.asarray(s), jnp.asarray(i))
+                         for s, i in dense)
+        from repro.parallel import fleet
+        sh = fleet.row_sharding(self.mesh)
+        out = []
+        for bi, (s, i) in enumerate(dense):
+            pad = self._pad_m[bi] - s.shape[0]
+            if pad:
+                s = np.concatenate(
+                    [s, np.full((pad, s.shape[1]), router.PAD_SCORE,
+                                s.dtype)])
+                i = np.concatenate(
+                    [i, np.full((pad, i.shape[1]), PAD_ID, i.dtype)])
+            out.append((jax.device_put(s, sh), jax.device_put(i, sh)))
+        return tuple(out)
+
+    def _dispatch(self, batches, donate: bool):
+        """Run one (already staged) fleet step and swap in the new
+        device states. Returns (wrotes, evs, new_states) for the host
+        meter; all three are still in-flight device arrays."""
         dstates = (tuple(self._drift_states)
                    if self._drift_states is not None else ())
         mstate = (self._metrics_state
                   if self._metrics_state is not None else ())
-        new_states, wrotes, evs, new_dstates, mstate = self._step(
+        if donate:
+            if self._donating_step is None:
+                self._donating_step = self._step_factory(True)
+            step = self._donating_step
+        else:
+            step = self._step
+        new_states, wrotes, evs, new_dstates, mstate = step(
             tuple(self._states), batches, dstates, mstate)
         self._states = list(new_states)
         if self._metrics_state is not None:
             self._metrics_state = mstate
-        for bi in range(len(self.buckets)):
-            _, dense_ids = routed[bi]
-            self.meter.record_update(self._global_rows[bi], dense_ids,
-                                     np.asarray(wrotes[bi]),
-                                     np.asarray(evs[bi]),
-                                     np.asarray(new_states[bi].ids))
+        if self._drift_states is not None:
+            self._drift_states = list(new_dstates)
+        return wrotes, evs, new_states
+
+    def _consume(self, dense, wrotes, evs, new_states,
+                 meter: bool = True) -> None:
+        """Host side of one step: meter the transactions (slicing any
+        sharded padding back off), drain residuals, maybe re-plan."""
+        if meter:
+            for bi in range(len(self.buckets)):
+                mb = self.buckets[bi].m
+                _, dense_ids = dense[bi]
+                self.meter.record_update(
+                    self._global_rows[bi], dense_ids,
+                    np.asarray(wrotes[bi])[:mb],
+                    np.asarray(evs[bi])[:mb],
+                    np.asarray(new_states[bi].ids)[:mb])
         residual_rows = ()
-        if self._residuals is not None:
+        if meter and self._residuals is not None:
             # chunk-boundary drain: the alert channel tests the meter's
             # cumulative write residual against its concentration bound
             newly = self._residuals.update(self.meter.observed,
@@ -449,9 +551,61 @@ class StreamEngine:
                     and self._drift_states is not None):
                 residual_rows = tuple(
                     int(r) for r in np.flatnonzero(self._residuals.alerted))
-        if self._drift_states is not None:
-            self._drift_states = list(new_dstates)
+        if meter and self._drift_states is not None:
             self._maybe_replan(residual_rows)
+
+    def _run_chunk(self, dense, *, meter: bool = True,
+                   donate: bool = False) -> None:
+        batches = self._stage_batches(dense)
+        wrotes, evs, new_states = self._dispatch(batches, donate)
+        self._consume(dense, wrotes, evs, new_states, meter=meter)
+
+    def ingest_dense(self, dense, *, meter: bool = True) -> None:
+        """Dense per-bucket ingestion, bypassing the host router: one
+        ``(scores (M_b, W), doc_ids (M_b, W))`` pair per bucket, aligned
+        with ``self.buckets``, rows ordered by doc id and padded with
+        ``(-inf, -1)`` — the layout ``router.route`` would produce. This
+        is the million-stream path: at fleet scale the router's host
+        scatter dominates, and producers that already emit per-stream
+        chunks can feed the jitted step directly.
+
+        ``meter=False`` skips the per-stream host ledgers *and* the
+        online re-plan/residual hooks for this chunk (pure-throughput
+        mode; the device states and obs counters still advance).
+        """
+        if len(dense) != len(self.buckets):
+            raise ValueError(f"need one (scores, ids) pair per bucket "
+                             f"({len(self.buckets)}), got {len(dense)}")
+        dense = [(np.asarray(s, np.float32), np.asarray(i, np.int32))
+                 for s, i in dense]
+        for bi, (s, i) in enumerate(dense):
+            if s.shape != i.shape or s.shape[0] != self.buckets[bi].m:
+                raise ValueError(
+                    f"bucket {bi}: scores {s.shape} / ids {i.shape} do "
+                    f"not match the bucket's {self.buckets[bi].m} streams")
+        self._run_chunk(dense, meter=meter)
+
+    def ingest_chunks(self, chunks, *, meter: bool = True) -> int:
+        """Async double-buffered dense ingestion: consume an iterable of
+        ``ingest_dense``-shaped chunk lists, keeping chunk t+1's
+        host→device transfer in flight while chunk t computes, and
+        donating the previous state/drift/metrics buffers to the step so
+        XLA reuses them for the outputs (no steady-state allocation).
+        Returns the number of chunks processed."""
+        it = iter(chunks)
+        nxt = next(it, None)
+        staged = self._stage_batches(nxt) if nxt is not None else None
+        count = 0
+        while staged is not None:
+            dense = nxt
+            # dispatch is async: the step runs while we stage chunk t+1
+            wrotes, evs, new_states = self._dispatch(staged, donate=True)
+            nxt = next(it, None)
+            staged = self._stage_batches(nxt) if nxt is not None else None
+            # host consumption blocks on chunk t's outputs last
+            self._consume(dense, wrotes, evs, new_states, meter=meter)
+            count += 1
+        return count
 
     def _maybe_replan(self, residual_rows: Sequence[int] = ()) -> None:
         """Between chunks: re-plan the streams whose drift detector fired
@@ -466,7 +620,7 @@ class StreamEngine:
         extra = set(residual_rows)
         for bi in range(len(self.buckets)):
             ds = self._drift_states[bi]
-            fired = np.asarray(ds.fired)
+            fired = np.asarray(ds.fired)[:self.buckets[bi].m]
             rows_b = self._global_rows[bi]
             flag = fired.copy()
             if extra:
@@ -539,11 +693,16 @@ class StreamEngine:
             assert not np.any(np.diff(scores, axis=1) > 0), \
                 "re-plan corrupted reservoir score order"
         for bi in set(bucket_of):
-            mask = np.zeros(self.buckets[bi].m, bool)
+            mask = np.zeros(self._pad_m[bi], bool)
             mask[[row_in_bucket[j] for j in range(len(rows))
                   if bucket_of[j] == bi]] = True
             self._drift_states[bi] = drift_mod.reset_where(
                 self._drift_states[bi], jnp.asarray(mask))
+            if self.mesh is not None:
+                # the eager where may have gathered — re-pin the fleet layout
+                from repro.parallel import fleet
+                self._drift_states[bi] = fleet.shard_rows(
+                    self.mesh, self._drift_states[bi])
         if self._residuals is not None:
             # the re-plan consumed this evidence — restart the residual
             # channel for the processed rows, like the detector
@@ -655,8 +814,9 @@ class StreamEngine:
             "occupancy": {
                 "fleet_realized": float(np.nansum(occ["realized"])),
                 "fleet_expected": float(np.nansum(occ["expected"])),
-                "max_normalized": float(np.nanmax(
-                    np.abs(occ["normalized"]))) if self.m else 0.0,
+                # all-NaN before any metered chunk (pure-throughput mode)
+                "max_normalized": float(np.nanmax(np.abs(occ["normalized"])))
+                if self.m and not np.isnan(occ["normalized"]).all() else 0.0,
             },
         }
         if self._residuals is not None:
@@ -668,14 +828,14 @@ class StreamEngine:
         each stream's r) and return the survivors."""
         if self._tracer is not None:
             with self._tracer.span("finalize"):
-                for bi in range(len(self.buckets)):
+                for bi, b in enumerate(self.buckets):
                     self.meter.record_reads(
                         self._global_rows[bi],
-                        np.asarray(self._states[bi].ids))
+                        np.asarray(self._states[bi].ids)[:b.m])
                 return self.survivors()
-        for bi in range(len(self.buckets)):
+        for bi, b in enumerate(self.buckets):
             self.meter.record_reads(self._global_rows[bi],
-                                    np.asarray(self._states[bi].ids))
+                                    np.asarray(self._states[bi].ids)[:b.m])
         return self.survivors()
 
     def finalize_tiers(self, use_pallas: bool = True) -> Dict[int, Dict]:
@@ -693,7 +853,7 @@ class StreamEngine:
         for bi, b in enumerate(self.buckets):
             rows = self._global_rows[bi]
             tier, counts = ta.tier_assign(
-                self._states[bi].ids, self.meter.boundaries[rows],
+                self._states[bi].ids[:b.m], self.meter.boundaries[rows],
                 self.meter.floor[rows], n_tiers=self.meter.n_tiers,
                 use_pallas=use_pallas)
             tier = np.asarray(tier)

@@ -236,22 +236,24 @@ def _plan_fleet_constrained(fc: FleetCosts, cset: ConstraintSet,
 # Fleet-shared capacity: the water-filling split
 # ---------------------------------------------------------------------------
 
-def waterfill(desired: np.ndarray, budget: float) -> np.ndarray:
+def waterfill(desired: np.ndarray, budget: float, *,
+              mesh=None) -> np.ndarray:
     """Split a shared budget across tenants: each stream gets
     ``min(desired_i, λ)`` with the water level λ chosen so the grants sum
     to the budget (all ``desired`` granted when they already fit).
-    Returns the (M,) per-stream caps."""
-    d = np.asarray(desired, np.float64)
-    if d.sum() <= budget:
-        return d.copy()
-    order = np.sort(d)
-    m = order.shape[0]
-    prefix = np.concatenate([[0.0], np.cumsum(order)])
-    # smallest j where filling everyone above order[j] to order[j] overflows
-    fill_at = prefix[:-1] + order * (m - np.arange(m))
-    j = int(np.searchsorted(fill_at, budget, side="right"))
-    lam = (budget - prefix[j]) / max(m - j, 1)
-    return np.minimum(d, max(lam, 0.0))
+    Returns the (M,) per-stream caps.
+
+    The exact host law lives in ``core.constraints.waterfill_grants``
+    (sort + prefix scan — one host view of the whole fleet). Under a
+    fleet mesh the desires stay sharded and λ is found device-side by a
+    ``psum`` bisection (``parallel.fleet.waterfill_sharded``) — same
+    grants to well below one ulp, and the fleet still never
+    oversubscribes the budget (property-tested)."""
+    if mesh is not None:
+        from repro.parallel import fleet
+        if fleet.n_shards(mesh) > 1:
+            return fleet.waterfill_sharded(desired, budget, mesh)
+    return constraints_mod.waterfill_grants(desired, budget)
 
 
 # ---------------------------------------------------------------------------
@@ -336,7 +338,7 @@ def _plan_mixed_ntier(nt_models, csets, boundaries, migrate,
 
 
 def plan_fleet_mixed(models: Sequence[TwoTierCostModel | NTierCostModel],
-                     constraints=None) -> MixedFleetPlan:
+                     constraints=None, *, mesh=None) -> MixedFleetPlan:
     """Plan a heterogeneous fleet in a handful of vectorized passes: one
     legacy two-tier pass plus one N-tier pass per distinct tier count.
 
@@ -347,7 +349,18 @@ def plan_fleet_mixed(models: Sequence[TwoTierCostModel | NTierCostModel],
     tier, grant ``min(desired, λ)`` with Σ grants = C, and re-plan only
     the binding streams under their grant — the fleet's total expected
     occupancy then never exceeds C (asserted by the property tests).
+
+    ``mesh`` (a ``parallel.fleet`` mesh) makes it the active fleet mesh
+    for the duration of the call: the device N-tier solves dispatch per
+    shard and the water-filling λ is found by cross-shard ``psum``
+    bisection instead of the single-host scan.
     """
+    if mesh is not None:
+        from repro.parallel import fleet
+        if fleet.get_fleet_mesh() is not mesh:
+            with fleet.use_fleet_mesh(mesh):
+                return plan_fleet_mixed(models, constraints=constraints,
+                                        mesh=mesh)
     m = len(models)
     boundaries: List[Tuple[float, ...]] = [()] * m
     migrate = np.zeros(m, bool)
@@ -418,7 +431,7 @@ def plan_fleet_mixed(models: Sequence[TwoTierCostModel | NTierCostModel],
         if desired.sum() <= cap_c.max_docs:
             done_tiers.append(cap_c.tier)
             continue
-        grants = waterfill(desired, cap_c.max_docs)
+        grants = waterfill(desired, cap_c.max_docs, mesh=mesh)
         binding = np.flatnonzero(desired > grants * (1 + 1e-12))
         # freeze the re-planned streams' usage of every already-balanced
         # shared tier at its current level, so re-planning for this tier

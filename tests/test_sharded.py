@@ -1,0 +1,345 @@
+"""repro.parallel — fleet-axis sharding. Sharded-vs-single-device bit
+identity for the engine step (reservoir + metrics + drift state), the
+candidate-grid solve, and the online suffix re-solve; the cross-shard
+water-filling never-oversubscribes property; sharded metrics
+aggregation; double-buffered ingest equality. Mesh tests skip unless
+jax sees >=2 devices (CI forces 8 via
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``); a subprocess
+smoke keeps one forced-mesh path alive in plain single-device runs."""
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import constraints as cons, costs, shp_jax, simulator
+from repro.obs import Observability, ObsConfig
+from repro.obs import jits as obs_jits
+from repro.obs import metrics as obs_metrics
+from repro.online import DriftConfig, ReplanConfig, replan_device
+from repro.parallel import fleet
+from repro.streams import StreamEngine, StreamSpec, planner
+
+needs_mesh = pytest.mark.skipif(
+    jax.local_device_count() < 2,
+    reason="needs >=2 devices "
+           "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+
+def _mesh():
+    return fleet.fleet_mesh(min(jax.local_device_count(), 8))
+
+
+def _two_tier_model(n=2048, k=16):
+    wl = costs.WorkloadSpec(n_docs=n, k=k, doc_gb=1e-4, window_months=0.5)
+    hot = costs.TierCosts("hot", put_per_doc=1e-6, get_per_doc=2.7e-4,
+                          storage_per_gb_month=0.05)
+    cold = costs.TierCosts("cold", put_per_doc=8e-5, get_per_doc=1e-6,
+                           storage_per_gb_month=0.02)
+    return costs.TwoTierCostModel(tier_a=hot, tier_b=cold, workload=wl)
+
+
+def _mixed_ingest(engines, specs, traces, batch, rng):
+    sids = np.array([s.stream_id for s in specs])
+    m, docs = traces.shape
+    for t in range(0, docs, batch):
+        mixed_sids = np.repeat(sids, batch)
+        mixed_dids = np.tile(np.arange(t, t + batch), m)
+        mixed_scores = traces[:, t:t + batch].reshape(-1)
+        perm = rng.permutation(mixed_sids.size)
+        for e in engines:
+            e.ingest(mixed_sids[perm], mixed_scores[perm],
+                     mixed_dids[perm])
+
+
+def _assert_engines_identical(ref, shd):
+    s_ref, s_shd = ref.finalize(), shd.finalize()
+    assert set(s_ref) == set(s_shd)
+    for sid in s_ref:
+        np.testing.assert_array_equal(s_ref[sid], s_shd[sid])
+    for field in ("observed", "writes", "deletes", "reads", "boundaries"):
+        np.testing.assert_array_equal(getattr(ref.meter, field),
+                                      getattr(shd.meter, field))
+    o_ref, o_shd = ref.obs_snapshot(), shd.obs_snapshot()
+    assert o_ref["engine"] == o_shd["engine"]
+    assert o_ref["meter"] == o_shd["meter"]
+
+
+# ---------------------------------------------------------------------------
+# engine step: sharded == single-device, bitwise
+# ---------------------------------------------------------------------------
+
+@needs_mesh
+@pytest.mark.parametrize("m", [5, 16, 33])
+def test_engine_sharded_bit_identity(m):
+    """Heterogeneous fleet (two K-buckets, M not a multiple of the shard
+    count) through shuffled mixed batches: survivors, every meter
+    ledger, and the aggregated device metrics must be bitwise equal to
+    the unsharded engine's."""
+    mesh = _mesh()
+    rng = np.random.default_rng(100 + m)
+
+    def build(mesh):
+        specs = [StreamSpec(stream_id=100 + i, k=(4 if i % 2 else 8),
+                            r=24.0) for i in range(m)]
+        obs = Observability(ObsConfig())
+        return StreamEngine(specs, obs=obs, mesh=mesh), specs
+
+    ref, specs = build(None)
+    shd, _ = build(mesh)
+    traces = rng.standard_normal((m, 48)).astype(np.float32)
+    _mixed_ingest([ref, shd], specs, traces, batch=6, rng=rng)
+    _assert_engines_identical(ref, shd)
+
+
+@needs_mesh
+def test_engine_sharded_replan_bit_identity():
+    """Online re-planning under the mesh: drift state rides sharded
+    through the step, the suffix re-solve dispatches per shard, and the
+    resulting events/boundaries are bitwise those of the plain path."""
+    mesh = _mesh()
+    rng = np.random.default_rng(7)
+    m, n, k, batch = 5, 2048, 16, 64
+    cm = _two_tier_model(n=n, k=k)
+    traces = np.stack([
+        simulator.drifted_rank_trace(n, rng, [(512, 8.0)])
+        for _ in range(m)]).astype(np.float32)
+
+    def build(mesh):
+        specs = [StreamSpec(stream_id=i, k=k, cost_model=cm)
+                 for i in range(m)]
+        eng = StreamEngine(
+            specs, obs=Observability(ObsConfig()), mesh=mesh,
+            replan=ReplanConfig(drift=DriftConfig(alpha=0.05)))
+        return eng, specs
+
+    ref, specs = build(None)
+    shd, _ = build(mesh)
+    np.testing.assert_array_equal(ref.meter.boundaries,
+                                  shd.meter.boundaries)
+    _mixed_ingest([ref, shd], specs, traces, batch=batch, rng=rng)
+    assert len(ref.replan_events) == len(shd.replan_events) > 0
+    for a, b in zip(ref.replan_events, shd.replan_events):
+        assert a.stream_id == b.stream_id and a.position == b.position
+        assert a.applied == b.applied
+        np.testing.assert_array_equal(np.asarray(a.new_bounds),
+                                      np.asarray(b.new_bounds))
+    _assert_engines_identical(ref, shd)
+
+
+@needs_mesh
+def test_ingest_chunks_double_buffered_equals_sequential():
+    """The donated double-buffered ingest loop lands the same fleet
+    state as chunk-at-a-time ``ingest_dense`` on the plain engine."""
+    mesh = _mesh()
+    rng = np.random.default_rng(3)
+    m, k, w, chunks = 12, 8, 16, 6
+
+    def build(mesh):
+        specs = [StreamSpec(stream_id=i, k=k, r=40.0) for i in range(m)]
+        return StreamEngine(specs, obs=Observability(ObsConfig()),
+                            mesh=mesh), specs
+
+    ref, _ = build(None)
+    shd, _ = build(mesh)
+    dense = []
+    for c in range(chunks):
+        sc = rng.standard_normal((m, w)).astype(np.float32)
+        ids = np.tile(np.arange(c * w, (c + 1) * w, dtype=np.int32),
+                      (m, 1))
+        dense.append([(sc, ids)])
+    for batches in dense:
+        ref.ingest_dense(batches)
+    assert shd.ingest_chunks(iter(dense)) == chunks
+    _assert_engines_identical(ref, shd)
+
+
+# ---------------------------------------------------------------------------
+# planner entry points: sharded == single-device, bitwise
+# ---------------------------------------------------------------------------
+
+def _plan_inputs(rng, m, t=3):
+    cw = rng.uniform(0.5, 2.0, (m, t))
+    cr = rng.uniform(0.1, 1.0, (m, t))
+    cs = rng.uniform(0.01, 0.2, (m, t))
+    n = rng.integers(50, 400, m).astype(np.float64)
+    k = rng.integers(2, 16, m).astype(np.float64)
+    rpw = rng.uniform(0.5, 4.0, m)
+    return cw, cr, cs, n, k, rpw
+
+
+@needs_mesh
+@pytest.mark.parametrize("m", [7, 64, 1000])
+@pytest.mark.parametrize("constrained", [False, True])
+def test_plan_sharded_bit_identity(m, constrained):
+    mesh = _mesh()
+    rng = np.random.default_rng(m)
+    cw, cr, cs, n, k, rpw = _plan_inputs(rng, m)
+    kw = {}
+    if constrained:
+        cap = np.full((m, 3), np.inf)
+        cap[:, 0] = rng.uniform(20, 80, m)
+        slo = np.full(m, np.inf)
+        slo[::3] = rng.uniform(0.5, 2.0, len(slo[::3]))
+        kw = dict(cap=cap, lat=rng.uniform(0.1, 1.0, (m, 3)), slo=slo)
+    ref = shp_jax.plan_ntier_arrays_jax(cw, cr, cs, n, k, rpw, **kw)
+    with fleet.use_fleet_mesh(mesh):
+        out = shp_jax.plan_ntier_arrays_jax(cw, cr, cs, n, k, rpw, **kw)
+    np.testing.assert_array_equal(ref["total"], out["total"])
+    np.testing.assert_array_equal(ref["bounds"], out["bounds"])
+    np.testing.assert_array_equal(ref["migrate"], out["migrate"])
+
+
+@needs_mesh
+def test_replan_device_sharded_bit_identity():
+    mesh = _mesh()
+    rng = np.random.default_rng(2)
+    r = 11
+    cw, cr, cs, n, k, rpw = _plan_inputs(rng, r)
+    cap = np.full((r, 3), np.inf)
+    cap[:, 0] = rng.uniform(20, 80, r)
+    lat = rng.uniform(0.1, 1.0, (r, 3))
+    slo = np.full(r, np.inf)
+    n0 = np.minimum(n * 0.5, n - 1)
+    rho = rng.uniform(0.5, 1.5, r)
+    b0 = np.sort(rng.uniform(0, 1, (r, 2)), axis=1) * n[:, None]
+    args = (cw, cr, cs, n, k, rpw, cap, lat, slo, n0, rho, b0)
+    ref = replan_device.solve_group(*args)
+    with fleet.use_fleet_mesh(mesh):
+        out = replan_device.solve_group(*args)
+    for a, b in zip(ref, out):
+        np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# cross-shard water-filling
+# ---------------------------------------------------------------------------
+
+def check_waterfill_never_oversubscribes(seed):
+    rng = np.random.default_rng(seed)
+    mesh = _mesh()
+    m = int(rng.integers(1, 60))
+    desired = rng.uniform(0.0, 50.0, m)
+    desired[rng.random(m) < 0.2] = 0.0  # zero-desire rows draw nothing
+    budget = float(desired.sum() * rng.uniform(0.1, 1.4))
+    grants = fleet.waterfill_sharded(desired, budget, mesh)
+    assert grants.shape == (m,)
+    assert (grants <= desired + 1e-9).all()
+    assert grants.sum() <= budget * (1 + 1e-12) + 1e-9
+    if desired.sum() <= budget:
+        np.testing.assert_allclose(grants, desired, rtol=1e-9)
+    # and it agrees with the exact host algorithm to solver tolerance
+    exact = cons.waterfill_grants(desired, budget)
+    np.testing.assert_allclose(grants, exact, rtol=1e-7, atol=1e-7)
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    @needs_mesh
+    @given(seed=st.integers(0, 2**31 - 1))
+    @settings(max_examples=25, deadline=None)
+    def test_waterfill_never_oversubscribes_property(seed):
+        check_waterfill_never_oversubscribes(seed)
+else:
+    @needs_mesh
+    def test_waterfill_never_oversubscribes_property():
+        for seed in range(12):
+            check_waterfill_never_oversubscribes(seed)
+
+
+@needs_mesh
+def test_planner_waterfill_dispatches_to_mesh():
+    mesh = _mesh()
+    desired = np.array([10.0, 0.0, 30.0, 5.0])
+    host = planner.waterfill(desired, 20.0)
+    shd = planner.waterfill(desired, 20.0, mesh=mesh)
+    np.testing.assert_allclose(host, shd, rtol=1e-9, atol=1e-9)
+    assert float(shd.sum()) <= 20.0 * (1 + 1e-12)
+
+
+# ---------------------------------------------------------------------------
+# sharded metrics layout (no mesh required)
+# ---------------------------------------------------------------------------
+
+def test_metrics_sharded_snapshot_aggregates():
+    """A (D, 7) sharded MetricsState snapshots to fleet-global numbers:
+    counts sum across shards, CHUNKS and the drift high-water take the
+    max (every shard bumps CHUNKS once per chunk)."""
+    ms = obs_metrics.init(shards=3)
+    assert ms.sharded
+    counts = np.zeros((3, 7), np.int32)
+    counts[:, obs_metrics.DOCS] = [10, 20, 30]
+    counts[:, obs_metrics.CHUNKS] = [4, 4, 4]
+    counts[:, obs_metrics.DRIFT_FIRED] = [1, 0, 2]
+    ms = ms._replace(counts=counts,
+                     drift_score_max=np.array([0.5, 2.0, 1.0],
+                                              np.float32))
+    snap = obs_metrics.snapshot(ms)
+    assert snap["docs"] == 60
+    assert snap["chunks"] == 4
+    assert snap["drift_fired"] == 3
+    assert snap["drift_score_max"] == 2.0
+    # shard_local / shard_pack round-trip the per-shard layout
+    local = obs_metrics.shard_local(ms)
+    assert local.counts.shape == (7,)
+    packed = obs_metrics.shard_pack(local)
+    assert np.asarray(packed.counts).shape == (1, 7)
+
+
+def test_mesh_key_shapes():
+    assert obs_jits.mesh_key(None) == ()
+    if jax.local_device_count() >= 2:
+        mesh = _mesh()
+        key = obs_jits.mesh_key(mesh)
+        assert key == (("fleet", fleet.n_shards(mesh)),)
+
+
+# ---------------------------------------------------------------------------
+# forced-mesh subprocess smoke (runs even on 1-device hosts)
+# ---------------------------------------------------------------------------
+
+_SMOKE = """
+import numpy as np
+from repro.parallel import fleet
+from repro.streams import StreamEngine, StreamSpec
+mesh = fleet.fleet_mesh(2)
+assert mesh is not None and fleet.n_shards(mesh) == 2
+desired = np.array([4.0, 0.0, 9.0])
+g = fleet.waterfill_sharded(desired, 6.0, mesh)
+assert g.sum() <= 6.0 * (1 + 1e-12)
+specs = [StreamSpec(stream_id=i, k=2, r=8.0) for i in range(3)]
+ref = StreamEngine(specs)
+shd = StreamEngine([StreamSpec(stream_id=i, k=2, r=8.0)
+                    for i in range(3)], mesh=mesh)
+rng = np.random.default_rng(0)
+for t in range(4):
+    sc = rng.standard_normal(3).astype(np.float32)
+    ref.ingest(np.arange(3), sc, np.full(3, t))
+    shd.ingest(np.arange(3), sc, np.full(3, t))
+a, b = ref.finalize(), shd.finalize()
+for sid in a:
+    np.testing.assert_array_equal(a[sid], b[sid])
+print("SMOKE-OK")
+"""
+
+
+def test_forced_mesh_subprocess_smoke():
+    """One end-to-end sharded pass under a forced 2-device CPU mesh, so
+    plain single-device test runs still exercise the mesh code path."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=2")
+    env["PYTHONPATH"] = os.pathsep.join(
+        [p for p in (env.get("PYTHONPATH"),) if p]
+        + [os.path.join(os.path.dirname(__file__), "..", "src")])
+    out = subprocess.run([sys.executable, "-c", _SMOKE], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "SMOKE-OK" in out.stdout

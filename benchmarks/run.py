@@ -33,6 +33,21 @@ CHECK_TOLERANCE = 0.30
 _SHARDED_RE = re.compile(r"^(?P<base>.+)\.sharded_d(?P<d>\d+)$")
 SHARD_FLOOR_FULL = 2.0
 
+# engine-backend memory floor: each ``<base>.logmem`` row is paired with
+# its SAME-RUN ``<base>.exact`` row by the ``bytes_per_stream`` extras —
+# device bytes are deterministic, so the floor has no tolerance band.
+# The O(log K) backend must stay >= 8x leaner than the O(K) reservoir at
+# K >= 4096 (at small K the fixed O(log K) footprint eats the margin)
+_BACKEND_RE = re.compile(r"^(?P<base>.+)\.(?P<backend>exact|logmem)$")
+MEMORY_FLOOR_FULL_K = 4096
+MEMORY_FLOOR_FULL = 8.0
+MEMORY_FLOOR_SMALL = 4.0
+
+
+def memory_ratio_floor(k: int) -> float:
+    return (MEMORY_FLOOR_FULL if k >= MEMORY_FLOOR_FULL_K
+            else MEMORY_FLOOR_SMALL)
+
 
 def shard_speedup_floor(devices: int) -> float:
     eff = min(devices, os.cpu_count() or 1)
@@ -158,6 +173,33 @@ def check_regressions(fresh: dict, baseline_dir: str = ".",
                 if entry["status"] == "sharded_slow":
                     regressions.append(entry)
             diff.append(entry)
+        # engine-backend rows: same-run memory pairing — a logmem row
+        # whose exact twin is missing (or whose bytes advantage drops
+        # under the floor) fails the run
+        for row in rows:
+            match = _BACKEND_RE.match(row["name"])
+            if match is None or match.group("backend") != "logmem" \
+                    or "bytes_per_stream" not in row:
+                continue
+            k = int(row.get("k", 0))
+            floor = memory_ratio_floor(k)
+            entry = {"name": row["name"], "guarded": True, "k": k,
+                     "floor": floor,
+                     "bytes_logmem": row["bytes_per_stream"]}
+            ref = by_name.get(match.group("base") + ".exact")
+            if (ref is None or "bytes_per_stream" not in ref
+                    or not row["bytes_per_stream"]):
+                entry["status"] = "missing_pair"
+                regressions.append(entry)
+            else:
+                ratio = ref["bytes_per_stream"] / row["bytes_per_stream"]
+                entry["bytes_exact"] = ref["bytes_per_stream"]
+                entry["bytes_ratio"] = ratio
+                entry["status"] = ("logmem_memory" if ratio < floor
+                                   else "ok")
+                if entry["status"] == "logmem_memory":
+                    regressions.append(entry)
+            diff.append(entry)
     path = write_trajectory("diff", diff, out_dir=out_dir)
     print(f"wrote {path} ({len(regressions)} guarded regression(s), "
           f"tolerance {tol:.0%})")
@@ -173,6 +215,15 @@ def check_regressions(fresh: dict, baseline_dir: str = ".",
                   f"{entry['speedup']:.2f}x vs same-run ref, floor "
                   f"{entry['floor']:.2f}x "
                   f"({entry['effective_cores']} effective core(s))")
+        elif entry["status"] == "missing_pair":
+            print(f"  MISSING same-run .exact memory pair for "
+                  f"{entry['name']}")
+        elif entry["status"] == "logmem_memory":
+            print(f"  LOGMEM-MEMORY {entry['name']}: only "
+                  f"{entry['bytes_ratio']:.1f}x leaner than exact "
+                  f"({entry['bytes_logmem']:.0f} vs "
+                  f"{entry['bytes_exact']:.0f} B/stream), floor "
+                  f"{entry['floor']:.1f}x at K={entry['k']}")
         else:
             print(f"  REGRESSION {entry['name']}: "
                   f"{entry['us_committed']:.1f}us -> "
@@ -222,10 +273,11 @@ def main() -> None:
             continue
         rows = []
 
-        def emit(row_name: str, us_per_call: float, derived: str = "") -> None:
+        def emit(row_name: str, us_per_call: float, derived: str = "",
+                 **extra) -> None:
             print(f"{row_name},{us_per_call:.1f},{derived}")
             rows.append({"name": row_name, "us_per_call": us_per_call,
-                         "derived": derived, "ts": time.time()})
+                         "derived": derived, **extra, "ts": time.time()})
 
         try:
             mod.run(emit)

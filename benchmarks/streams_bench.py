@@ -28,6 +28,17 @@ from repro.streams import engine
 K, BATCH = 16, 64
 SWEEP_M = (64, 256, 1024)
 DRIFT_M = (1024, 16384)
+# engine-backend pairs: matched (K, M, W) fleets, exact vs logmem — the
+# rows carry bytes_per_stream extras that run.py --check holds to the
+# memory-regression floor (logmem >= 8x leaner at K >= 4096)
+# reps/rounds shrink with K: the exact step's narrow-batch path pays an
+# O(W*K) resident-id dedupe per call (seconds at K=65536 on CPU), and
+# the floor guards deterministic bytes, not the timing
+BACKEND_SWEEP = ((256, 256, 512, 5, 4), (4_096, 128, 1_024, 3, 2),
+                 (65_536, 8, 1_024, 1, 2))  # (K, M, W, reps, rounds)
+# competitive-ratio harness traces: (K, M, n, chunk)
+RATIO_SWEEP = ((256, 64, 16_384, 512), (4_096, 8, 131_072, 2_048),
+               (65_536, 2, 262_144, 8_192))
 # fleet-mesh scaling rows: (M, W) pairs; emitted only when jax sees a
 # multi-device mesh (CI forces 8 CPU devices via
 # XLA_FLAGS=--xla_force_host_platform_device_count=8)
@@ -70,6 +81,66 @@ def _engine_step_pair(emit, m, rng):
         emit(f"streams.engine_step{suffix}_m{m}_k{K}_b{BATCH}", us,
              f"{m * BATCH / us * 1e6:.0f} docs/s fleet step "
              f"({'device metrics on' if obs else 'telemetry off'})")
+
+
+def _state_bytes_per_stream(states) -> float:
+    """Device bytes per stream across a fleet's bucket states (pytree
+    leaves / total rows) — the number the memory floor guards."""
+    total = sum(int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+                for st in states for leaf in st)
+    rows = sum(int(st[0].shape[0]) for st in states)
+    return total / max(rows, 1)
+
+
+def _backend_rows(emit, rng):
+    """Paired exact/logmem engine-step rows at matched (K, M, W): same
+    batch, same bucket structure, interleaved min-of-rounds so the
+    pair's delta is the backend, not machine weather. Each row carries
+    ``bytes_per_stream`` + ``k`` extras; ``run.py --check`` pairs the
+    ``.exact``/``.logmem`` suffixes same-run and fails when logmem's
+    memory advantage drops under the floor."""
+    for k, m, w, reps, rounds in BACKEND_SWEEP:
+        sc = rng.standard_normal((m, w)).astype(np.float32)
+        ids = np.tile(np.arange(w, dtype=np.int32), (m, 1))
+        batches = ((jnp.asarray(sc), jnp.asarray(ids)),)
+        variants = []
+        for backend in ("exact", "logmem"):
+            specs = [engine.StreamSpec(stream_id=i, k=k, r=float(4 * k),
+                                       engine=backend) for i in range(m)]
+            eng = engine.StreamEngine(specs)
+            variants.append((backend, eng, [float("inf")]))
+        for _ in range(rounds):
+            for _, eng, best in variants:
+                best[0] = min(best[0],
+                              _time(eng._step, tuple(eng._states), batches,
+                                    (), (), reps=reps))
+        for backend, eng, best in variants:
+            us = best[0]
+            bps = _state_bytes_per_stream(eng._states)
+            emit(f"streams.engine_backend_k{k}_m{m}_w{w}.{backend}", us,
+                 f"{m * w / us * 1e6:.0f} docs/s {backend} step, "
+                 f"{bps:.0f} B/stream device state",
+                 bytes_per_stream=bps, k=k)
+
+
+def _logmem_ratio_rows(emit, rng):
+    """Simulator-trace harness rows: replay i.u.d. traces through the
+    logmem backend and report the realized competitive ratio (top-K mass
+    retained vs the true top-K) and its 1 − c/√K constant, plus the
+    admit count against the closed-form write law."""
+    from repro.streams import logmem
+    for k, m, n, chunk in RATIO_SWEEP:
+        sc = rng.standard_normal((m, n)).astype(np.float32)
+        t0 = time.perf_counter()
+        rep = logmem.trace_competitive_ratio(sc, k, chunk)
+        us = (time.perf_counter() - t0) * 1e6
+        emit(f"streams.logmem_ratio_k{k}_n{n}_c{chunk}", us,
+             f"ratio>={rep['min_ratio']:.5f} (c<={rep['max_c']:.3f}), "
+             f"admits {np.mean(rep['admit_ratio']):.3f}x law, "
+             f"{rep['bytes_per_stream']:.0f} vs "
+             f"{rep['exact_bytes_per_stream']:.0f} B/stream",
+             min_ratio=rep["min_ratio"], max_c=rep["max_c"],
+             admit_ratio=float(np.mean(rep["admit_ratio"])), k=k)
 
 
 def _sharded_step_rows(emit, rng):
@@ -167,6 +238,8 @@ def run(emit):
         emit(f"online.drift_update_m{m}", us,
              f"{m * BATCH / us * 1e6:.0f} docs/s detector "
              f"(M-batched {BATCH}-doc chunk stats)")
+    _backend_rows(emit, rng)
+    _logmem_ratio_rows(emit, rng)
     _sharded_step_rows(emit, rng)
 
 
@@ -183,10 +256,10 @@ def main():
     args = ap.parse_args()
     rows = []
 
-    def emit(name, us, derived=""):
+    def emit(name, us, derived="", **extra):
         print(f"{name},{us:.1f},{derived}")
         rows.append({"name": name, "us_per_call": us, "derived": derived,
-                     "ts": time.time()})
+                     **extra, "ts": time.time()})
 
     run(emit)
     print(f"wrote {write_trajectory('streams', rows, args.json, args.out_dir)}")

@@ -16,6 +16,12 @@ Phases (all on a forced multi-device CPU mesh — no hardware needed):
 3. **Finalize** — final top-K reads metered per stream; the obs
    snapshot reports fleet-global (cross-shard aggregated) counters.
 
+Beside the million small-K exact reservoirs the window co-runs a pack of
+huge-K ``engine="logmem"`` tenants (K = 65536 by default): O(log K)
+device state advanced by the same sharded step, with the admit counts
+asserted against the closed-form write law within the backend's
+1−O(1/√K) slack and the bytes-per-stream advantage checked >= 8x.
+
 Run:
   PYTHONPATH=src python examples/million_streams.py [--streams 1000000]
   PYTHONPATH=src python examples/million_streams.py --ci   # 64k, CI scale
@@ -54,7 +60,7 @@ from repro.core import constraints as cons  # noqa: E402
 from repro.core import shp_jax  # noqa: E402
 from repro.obs import Observability, ObsConfig  # noqa: E402
 from repro.parallel import fleet  # noqa: E402
-from repro.streams import StreamEngine, StreamSpec, planner  # noqa: E402
+from repro.streams import StreamEngine, StreamSpec, logmem, planner  # noqa: E402
 
 
 def fleet_cost_arrays(rng, m, n_docs, k):
@@ -118,15 +124,24 @@ def plan_phase(mesh, rng, m, n_docs, k, hot_frac):
     }
 
 
-def dense_chunks(rng, m, w, n_chunks):
-    """Generator of ingest_dense-shaped chunks (one uniform-K bucket):
-    produced lazily so chunk t+1's materialization and host→device copy
-    overlap chunk t's sharded step."""
+def dense_chunks(rng, m, w, n_chunks, lm=0, lw=0):
+    """Generator of ingest_dense-shaped chunks: the main uniform-K exact
+    bucket, plus (when ``lm`` > 0) a second pair for the huge-K logmem
+    bucket — wider chunks, so the big-K tenants get past their admit-all
+    warmup inside the same window. Produced lazily so chunk t+1's
+    materialization and host→device copy overlap chunk t's sharded
+    step."""
     for c in range(n_chunks):
         sc = rng.standard_normal((m, w)).astype(np.float32)
         ids = np.tile(np.arange(c * w, (c + 1) * w, dtype=np.int32),
                       (m, 1))
-        yield [(sc, ids)]
+        pairs = [(sc, ids)]
+        if lm:
+            ls = rng.standard_normal((lm, lw)).astype(np.float32)
+            lids = np.tile(np.arange(c * lw, (c + 1) * lw, dtype=np.int32),
+                           (lm, 1))
+            pairs.append((ls, lids))
+        yield pairs
 
 
 def main():
@@ -145,18 +160,32 @@ def main():
                     help="keep the per-stream host ledgers during ingest "
                          "(the default is pure-throughput: device metrics "
                          "only, ledgers at finalize)")
+    ap.add_argument("--logmem-streams", type=int, default=None,
+                    help="huge-K O(log K) tenants co-run beside the main "
+                         "fleet (default: 64 under --ci, else 0)")
+    ap.add_argument("--logmem-k", type=int, default=65_536,
+                    help="reservoir width of the logmem tenants")
+    ap.add_argument("--logmem-chunk", type=int, default=8_192,
+                    help="docs per logmem stream per ingest chunk")
     ap.add_argument("--ci", action="store_true",
-                    help="CI scale: 64k streams")
+                    help="CI scale: 64k streams + 64 K=65536 logmem "
+                         "tenants")
     ap.add_argument("--out", default="bench_out/million_streams.json")
     args = ap.parse_args()
     if args.ci:
         args.streams = min(args.streams, 64_000)
+    lm = (args.logmem_streams if args.logmem_streams is not None
+          else (64 if args.ci else 0))
+    lk, lw = args.logmem_k, args.logmem_chunk
 
     mesh = fleet.fleet_mesh(args.devices) if args.devices > 1 else None
     shards = fleet.n_shards(mesh)
     m, k = args.streams, args.topk
+    if lm and lm % max(shards, 1):
+        lm = (-(-lm // shards)) * shards  # keep the logmem bucket even
     print(f"{m} streams on {jax.local_device_count()} devices "
-          f"({shards} shards)")
+          f"({shards} shards)"
+          + (f" + {lm} logmem tenants at K={lk}" if lm else ""))
     rng = np.random.default_rng(0)
 
     # --- phase 1: sharded plan + cross-shard water-filling ---------------
@@ -172,21 +201,28 @@ def main():
     specs = [StreamSpec(stream_id=i, k=k, boundaries=bt, migrate=bool(mg))
              for i, (bt, mg) in enumerate(zip(
                  map(tuple, plan["bounds"]), plan["migrate"]))]
+    # huge-K tenants: O(log K) device state, admission by threshold
+    # compare — the same fleet step advances both buckets
+    specs += [StreamSpec(stream_id=m + i, k=lk, r=float(4 * lk),
+                         engine="logmem") for i in range(lm)]
     obs = Observability(ObsConfig(residuals=False))
     eng = StreamEngine(specs, obs=obs, mesh=mesh)
     t_build = time.time() - t0
     n_chunks = args.docs // args.chunk
     t0 = time.time()
     done = eng.ingest_chunks(
-        dense_chunks(rng, m, args.chunk, n_chunks), meter=args.meter)
+        dense_chunks(rng, m, args.chunk, n_chunks, lm, lw),
+        meter=args.meter)
     t_ingest = time.time() - t0
-    docs = m * args.chunk * done
+    docs = (m * args.chunk + lm * lw) * done
     print(f"ingest: {done} chunks, {docs / 1e6:.1f}M docs in "
           f"{t_ingest:.2f}s ({docs / t_ingest / 1e6:.2f}M docs/s)")
 
     # --- phase 3: finalize + fleet-global obs ----------------------------
     t0 = time.time()
     for bi, b in enumerate(eng.buckets):
+        if b.engine == "logmem":
+            continue  # no device-resident ids to read back
         eng.meter.record_reads(eng._global_rows[bi],
                                np.asarray(eng._states[bi].ids)[:b.m])
     t_final = time.time() - t0
@@ -197,6 +233,36 @@ def main():
     print(f"finalize: {t_final:.2f}s; fleet-global obs: "
           f"docs={em['docs']} admits={em['admits']} "
           f"evictions={em['evictions']} chunks={em['chunks']}")
+
+    lm_stats = None
+    if lm:
+        lb = next(bi for bi, b in enumerate(eng.buckets)
+                  if b.engine == "logmem")
+        admits = np.asarray(eng._states[lb].admits, np.float64)[:lm]
+        n_lm = lw * done
+        law = float(logmem.expected_admits(np.asarray([n_lm]), lk)[0])
+        slack = logmem.law_slack(lk)
+        admit_ratio = float(admits.mean()) / law
+        bps = logmem.state_bytes_per_stream(eng._states[lb])
+        exact_bps = logmem.exact_bytes_per_stream(lk)
+        assert abs(admit_ratio - 1.0) <= 3.0 * slack, \
+            (f"logmem admits {admit_ratio:.4f}x law, beyond the "
+             f"{3.0 * slack:.4f} slack budget")
+        assert exact_bps / bps >= 8.0, (bps, exact_bps)
+        lm_stats = {
+            "streams": lm, "k": lk, "docs_per_stream": n_lm,
+            "admits_mean": float(admits.mean()),
+            "expected_admits": law,
+            "admit_ratio": round(admit_ratio, 5),
+            "law_slack": round(slack, 5),
+            "bytes_per_stream": round(bps, 1),
+            "exact_bytes_per_stream": exact_bps,
+            "memory_ratio": round(exact_bps / bps, 1),
+        }
+        print(f"logmem: {lm} tenants at K={lk}: admits "
+              f"{admit_ratio:.4f}x law (slack {slack:.4f}), "
+              f"{bps:.0f} B/stream vs {exact_bps:.0f} exact "
+              f"({exact_bps / bps:.0f}x leaner)")
 
     out = {
         "streams": m, "devices": jax.local_device_count(),
@@ -209,6 +275,7 @@ def main():
         "finalize_s": round(t_final, 3),
         "obs_engine": em,
         "meter": snap["meter"],
+        "logmem": lm_stats,
     }
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     with open(args.out, "w") as f:

@@ -36,6 +36,16 @@ def init(k: int) -> ReservoirState:
     )
 
 
+def member(needles: jax.Array, haystack: jax.Array) -> jax.Array:
+    """Boolean membership mask (``needles[i] in haystack``) via
+    sort + binary search — O((H+N)·log H) instead of ``jnp.isin``'s
+    O(N·H) broadcast compare, which dominates the exact path at huge K
+    (a K=65536 eviction scan is 4G compares per stream)."""
+    hs = jnp.sort(haystack)
+    pos = jnp.clip(jnp.searchsorted(hs, needles), 0, hs.shape[0] - 1)
+    return hs[pos] == needles
+
+
 def _merge_sorted(scores: jax.Array, ids: jax.Array, k: int):
     """Top-k of (scores, ids) with lower-id tie-break; returns sorted desc."""
     # lexsort: primary = -score, secondary = id  → stable deterministic order.
@@ -57,7 +67,7 @@ def update(state: ReservoirState, batch_scores: jax.Array,
     k = state.scores.shape[0]
     batch_scores = batch_scores.astype(jnp.float32).reshape(-1)
     batch_ids = batch_ids.astype(jnp.int32).reshape(-1)
-    resident = jnp.isin(batch_ids, state.ids)
+    resident = member(batch_ids, state.ids)
     cand_scores = jnp.where(resident, -jnp.inf, batch_scores)
     cand_ids = jnp.where(resident, -1, batch_ids)
     all_scores = jnp.concatenate([state.scores, cand_scores])
@@ -78,7 +88,7 @@ def update(state: ReservoirState, batch_scores: jax.Array,
 def evicted(old: ReservoirState, new: ReservoirState) -> jax.Array:
     """Mask over ``old.ids`` of entries no longer present in ``new`` —
     the documents whose storage can be freed (overwritten, paper §VI)."""
-    return (old.ids >= 0) & ~jnp.isin(old.ids, new.ids)
+    return (old.ids >= 0) & ~member(old.ids, new.ids)
 
 
 def merge(a: ReservoirState, b: ReservoirState) -> ReservoirState:

@@ -1,0 +1,72 @@
+"""Pallas TPU kernel: fused logmem admission scan for M concurrent streams.
+
+The logarithmic-memory engine backend (``repro.streams.logmem``) admits a
+doc iff its score beats the stream's acceptance threshold ``tau`` — the
+O(log K) analog of the exact reservoir's bar scan. Its hot path touches
+every (score, id) pair exactly once: compare against tau, mask out
+padding, and reduce the per-tile admit/live counts the threshold-update
+epilogue consumes (the live count sets the chunk's target quantile rank
+r = round(W·K/t); the admit counts are the write-law evidence the drift
+detector tests).
+
+Grid: (M, W/bn) — one program per (stream, tile) pair, same shape as
+``batched_topk`` but ids-aware: padding is identified by id < 0 (not by
+a score sentinel), so pad columns are inert in every output. Each
+program reads one score tile, one id tile and its stream's tau from
+VMEM and emits the admit mask plus per-(stream, tile) admit count, live
+count and live maximum. Embarrassingly parallel, bandwidth-bound — one
+pass over HBM regardless of M.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(scores_ref, ids_ref, tau_ref, mask_ref, acount_ref,
+            lcount_ref, tmax_ref):
+    s = scores_ref[...].astype(jnp.float32)  # (1, bn)
+    ids = ids_ref[...]  # (1, bn) int32
+    tau = tau_ref[0]  # this stream's acceptance threshold
+    live = ids >= 0
+    hit = live & (s > tau)
+    mask_ref[...] = hit.astype(jnp.int8)
+    acount_ref[0, 0] = hit.sum().astype(jnp.int32)
+    lcount_ref[0, 0] = live.sum().astype(jnp.int32)
+    tmax_ref[0, 0] = jnp.where(live, s, -jnp.inf).max()
+
+
+def logmem_admit_pallas(scores, ids, tau, *, block_n: int = 512,
+                        interpret: bool = False):
+    """scores (M, N) float, ids (M, N) int32 (< 0 = padding), tau (M,)
+    float32. Returns (mask (M, N) int8, admit_counts (M, N/bn) int32,
+    live_counts (M, N/bn) int32, tile_max (M, N/bn) f32 — live maximum,
+    -inf on all-pad tiles).
+    """
+    m, n = scores.shape
+    assert n % block_n == 0, (n, block_n)
+    n_tiles = n // block_n
+    return pl.pallas_call(
+        _kernel,
+        grid=(m, n_tiles),
+        in_specs=[
+            pl.BlockSpec((1, block_n), lambda i, j: (i, j)),
+            pl.BlockSpec((1, block_n), lambda i, j: (i, j)),
+            pl.BlockSpec((1,), lambda i, j: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_n), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        ],
+        out_shape=(
+            jax.ShapeDtypeStruct((m, n), jnp.int8),
+            jax.ShapeDtypeStruct((m, n_tiles), jnp.int32),
+            jax.ShapeDtypeStruct((m, n_tiles), jnp.int32),
+            jax.ShapeDtypeStruct((m, n_tiles), jnp.float32),
+        ),
+        interpret=interpret,
+    )(scores.astype(jnp.float32), ids.astype(jnp.int32),
+      tau.astype(jnp.float32).reshape(m))

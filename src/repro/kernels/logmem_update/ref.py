@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the fused logmem admission scan."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def logmem_admit(scores, ids, tau, block_n: int):
+    scores = scores.astype(jnp.float32)
+    ids = ids.astype(jnp.int32)
+    m, n = scores.shape
+    n_tiles = n // block_n
+    live = ids >= 0
+    hit = live & (scores > tau.astype(jnp.float32).reshape(m, 1))
+    mask = hit.astype(jnp.int8)
+    acounts = hit.reshape(m, n_tiles, block_n).sum(axis=2,
+                                                   dtype=jnp.int32)
+    lcounts = live.reshape(m, n_tiles, block_n).sum(axis=2,
+                                                    dtype=jnp.int32)
+    tmax = jnp.where(live, scores, -jnp.inf) \
+        .reshape(m, n_tiles, block_n).max(axis=2)
+    return mask, acounts, lcounts, tmax

@@ -101,13 +101,43 @@ def write_residuals(meter, batch: int = 1) -> dict:
             "var": var, "z": z}
 
 
-def occupancy_residuals(meter) -> dict:
+def expected_tier_writes(bounds, n: int, k: int,
+                         batch: int = 1) -> np.ndarray:
+    """(T,) expected cumulative reservoir writes landing in each tier of
+    a static placement after ``n`` docs: Λ(e_{t+1}) − Λ(e_t) with
+    Λ(x) = Σ_{j≤x} min(1, K/j) (the write law, batched form when
+    ``batch`` > 1) evaluated at the tier edges e = [0, ⌈b_1⌉, …, n].
+    This is the occupancy law of a backend that never deletes
+    (``streams.logmem`` — admitted docs stay in their write tier until
+    window end), where occupancy ≡ cumulative writes."""
+    from repro.core import shp
+    b = np.asarray(bounds, np.float64)
+    edges = np.clip(np.ceil(b), 0.0, float(n))
+    edges = np.concatenate([[0.0], edges, [float(n)]])
+    edges = np.maximum.accumulate(edges)
+    cum = np.zeros(edges.shape[0], np.float64)
+    pos = edges.astype(np.int64)
+    nz = pos > 0
+    if nz.any():
+        cum[nz] = shp.expected_cum_writes_batched(pos[nz] - 1, int(k),
+                                                  int(batch))
+    return np.diff(cum)
+
+
+def occupancy_residuals(meter, batch: int = 1) -> dict:
     """(M, T) realized occupancy high-water marks vs the occupancy law's
     peak evaluated on the prefix seen so far (tier edges clipped to the
     current position). Cascade (migrating) streams are masked NaN — the
     law models static placements. The normalized residual is relative to
     ``max(expected, 1)`` (occupancy peaks are deterministic O(K) scale,
-    not variance-budgeted sums)."""
+    not variance-budgeted sums).
+
+    Logmem rows (``meter.logmem``) never report deletes, so their
+    occupancy is cumulative writes and the reference law switches to the
+    per-tier write-law deltas (``expected_tier_writes``, evaluated at
+    ``batch`` — pass the ingest width for a chunk-faithful reference) —
+    the residual stays near zero for an undrifted logmem tenant even
+    though its storage grows past K."""
     from repro.core.constraints import peak_occupancy_arrays
     bounds = meter.boundaries
     n = np.maximum(meter.observed.astype(np.float64), 1.0)
@@ -115,6 +145,12 @@ def occupancy_residuals(meter) -> dict:
     expected = peak_occupancy_arrays(
         np.minimum(bounds, n[:, None]), n, k,
         np.zeros(meter.m, bool))
+    logmem = np.asarray(getattr(meter, "logmem", np.zeros(meter.m, bool)),
+                        bool)
+    for i in np.flatnonzero(logmem & (meter.observed > 0)):
+        expected[i] = expected_tier_writes(bounds[i],
+                                           int(meter.observed[i]),
+                                           int(meter.ks[i]), batch)
     realized = meter.occupancy_hwm.astype(np.float64)
     resid = realized - expected
     norm = resid / np.maximum(expected, 1.0)
@@ -159,14 +195,25 @@ class ResidualMonitor:
     and running-extremum anchors whose excursions replicate the CUSUM
     recursion. ``alerted`` latches; ``reset_where`` restarts a stream's
     evidence after a re-plan consumed it (mirroring the detector).
+
+    ``law_slack`` is the (M,) fractional admit-count tolerance of an
+    approximate engine backend (``streams.logmem.law_slack`` — zero for
+    exact rows): each test's threshold grows by slack × the expected
+    mass accumulated since its anchor, exactly mirroring the device
+    detector, so an undrifted logmem fleet keeps its null FPR ≤ alpha
+    while genuine drift still clears the widened bound.
     """
 
-    def __init__(self, ks, alpha: float = 0.01, max_checks: int = 1024):
+    def __init__(self, ks, alpha: float = 0.01, max_checks: int = 1024,
+                 law_slack=None):
         ks = np.asarray(ks, np.float64)
         m = ks.shape[0]
         self.k = ks
         self.alpha = float(alpha)
         self.max_checks = int(max_checks)
+        self.law_slack = (np.zeros(m, np.float64) if law_slack is None
+                          else np.broadcast_to(
+                              np.asarray(law_slack, np.float64), (m,)).copy())
         # same three-way alpha split as DriftConfig: whole-window gets
         # alpha/2, each excursion side alpha/4 — exponents coincide
         self.a_whole = math.log(4.0 * self.max_checks / self.alpha)
@@ -179,6 +226,11 @@ class ResidualMonitor:
         self.var_at_min = np.zeros(m, np.float64)
         self.max_dev = np.zeros(m, np.float64)
         self.var_at_max = np.zeros(m, np.float64)
+        # expected mass since the last reset and at each anchor — the
+        # slack terms scale with these (zero for exact rows)
+        self.exp_since = np.zeros(m, np.float64)
+        self.exp_at_min = np.zeros(m, np.float64)
+        self.exp_at_max = np.zeros(m, np.float64)
         self.checks = np.zeros(m, np.int64)
         self.steps = 0  # monitor updates (global chunk index)
         self.alerted = np.zeros(m, bool)
@@ -212,19 +264,26 @@ class ResidualMonitor:
         var_c = np.where(active, var_c, 0.0)
         self.dev += d
         self.var += var_c
-        self.exp_total += np.where(active, mean, 0.0)
+        exp_c = np.where(active, mean, 0.0)
+        self.exp_total += exp_c
+        self.exp_since += exp_c
         self.var_total += var_c
         self.checks += active
         self.steps += 1
         extra = self._extra()
         # excursion = deviation re-anchored at its running extremum: the
-        # CUSUM recursion, with the variance spent since the anchor
+        # CUSUM recursion, with the variance spent since the anchor;
+        # law_slack widens each threshold by the expected mass since
+        # that anchor (approximate-backend tolerance, zero when exact)
         whole = np.abs(self.dev) > bernstein_threshold_np(
-            self.var, self.a_whole + extra)
+            self.var, self.a_whole + extra) \
+            + self.law_slack * self.exp_since
         pos = (self.dev - self.min_dev) > bernstein_threshold_np(
-            self.var - self.var_at_min, self.a_exc + extra)
+            self.var - self.var_at_min, self.a_exc + extra) \
+            + self.law_slack * (self.exp_since - self.exp_at_min)
         neg = (self.max_dev - self.dev) > bernstein_threshold_np(
-            self.var - self.var_at_max, self.a_exc + extra)
+            self.var - self.var_at_max, self.a_exc + extra) \
+            + self.law_slack * (self.exp_since - self.exp_at_max)
         hit = active & (whole | pos | neg)
         newly = hit & ~self.alerted
         # first alert only: evidence resets (``reset_where``) let a stream
@@ -237,9 +296,11 @@ class ResidualMonitor:
         lower = self.dev < self.min_dev
         self.min_dev = np.where(lower, self.dev, self.min_dev)
         self.var_at_min = np.where(lower, self.var, self.var_at_min)
+        self.exp_at_min = np.where(lower, self.exp_since, self.exp_at_min)
         higher = self.dev > self.max_dev
         self.max_dev = np.where(higher, self.dev, self.max_dev)
         self.var_at_max = np.where(higher, self.var, self.var_at_max)
+        self.exp_at_max = np.where(higher, self.exp_since, self.exp_at_max)
         self.seen = np.where(active, b, self.seen)
         self.writes = np.where(active, w, self.writes)
         return newly
@@ -248,13 +309,16 @@ class ResidualMonitor:
         """(M,) max test statistic over its threshold (≥ 1 ⇒ alert)."""
         extra = self._extra()
         whole = np.abs(self.dev) / np.maximum(
-            bernstein_threshold_np(self.var, self.a_whole + extra), 1e-9)
+            bernstein_threshold_np(self.var, self.a_whole + extra)
+            + self.law_slack * self.exp_since, 1e-9)
         pos = (self.dev - self.min_dev) / np.maximum(
             bernstein_threshold_np(self.var - self.var_at_min,
-                                   self.a_exc + extra), 1e-9)
+                                   self.a_exc + extra)
+            + self.law_slack * (self.exp_since - self.exp_at_min), 1e-9)
         neg = (self.max_dev - self.dev) / np.maximum(
             bernstein_threshold_np(self.var - self.var_at_max,
-                                   self.a_exc + extra), 1e-9)
+                                   self.a_exc + extra)
+            + self.law_slack * (self.exp_since - self.exp_at_max), 1e-9)
         return np.maximum(whole, np.maximum(pos, neg))
 
     def reset_where(self, mask) -> None:
@@ -262,7 +326,7 @@ class ResidualMonitor:
         ``seen``/``writes`` baselines are preserved."""
         mask = np.asarray(mask, bool)
         for name in ("dev", "var", "min_dev", "var_at_min", "max_dev",
-                     "var_at_max"):
+                     "var_at_max", "exp_since", "exp_at_min", "exp_at_max"):
             arr = getattr(self, name)
             arr[mask] = 0.0
         self.checks[mask] = 0
@@ -271,13 +335,17 @@ class ResidualMonitor:
     def write_z(self) -> dict:
         """(M,) whole-run realized vs chunk-law expected cumulative
         writes with the z-score — the snapshot's exported residual
-        (chunk-aware, unlike the batch-agnostic ``write_residuals``)."""
+        (chunk-aware, unlike the batch-agnostic ``write_residuals``).
+        Approximate-backend rows fold their systematic tolerance
+        (law_slack × expected)² into the variance so their z stays O(1)
+        when the backend tracks the law within its guarantee."""
         resid = self.writes - self.exp_total
-        z = resid / np.sqrt(np.maximum(self.var_total, 1e-12))
+        var_eff = self.var_total + (self.law_slack * self.exp_total) ** 2
+        z = resid / np.sqrt(np.maximum(var_eff, 1e-12))
         z = np.where(self.seen > 0, z, 0.0)
         return {"realized": self.writes.copy(),
                 "expected": self.exp_total.copy(), "residual": resid,
-                "var": self.var_total.copy(), "z": z}
+                "var": var_eff, "z": z}
 
     def snapshot(self) -> dict:
         sc = self.scores()

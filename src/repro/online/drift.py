@@ -143,12 +143,19 @@ def _budget_overrun(checks, cfg: DriftConfig):
 
 
 def update(state: DriftState, wrote_count, seen_after,
-           k, cfg: DriftConfig) -> DriftState:
+           k, cfg: DriftConfig, slack: float = 0.0) -> DriftState:
     """One chunk of evidence per stream (jit-friendly, (M,) batched).
 
     ``wrote_count``: reservoir entries this chunk; ``seen_after``: docs
     observed after the merge; ``k``: per-stream (or scalar) reservoir
     width. Streams that observed nothing this chunk are untouched.
+
+    ``slack`` is the fractional admit-count tolerance of an approximate
+    engine backend (``streams.logmem.law_slack`` — the 1−O(1/√K)
+    budget): each test's threshold grows by ``slack × expected mass``
+    accumulated since its anchor, so the backend's systematic law bias
+    is absorbed without loosening the null guarantee (thresholds only
+    grow; slack = 0 reproduces the exact-backend test bitwise).
     """
     w = jnp.asarray(wrote_count, jnp.float32)
     b = jnp.asarray(seen_after, jnp.float32)
@@ -178,11 +185,14 @@ def update(state: DriftState, wrote_count, seen_after,
         neg_live, jnp.where(was_neg, state.cusum_neg_seen, state.seen), 0.0)
     checks = state.checks + active.astype(jnp.int32)
     extra = _budget_overrun(checks, cfg)
-    hit = (jnp.abs(dev) > bernstein_threshold(var, cfg.bernstein_a + extra)) \
+    hit = (jnp.abs(dev) > bernstein_threshold(var, cfg.bernstein_a + extra)
+           + slack * expected) \
         | (cusum_pos > bernstein_threshold(cusum_pos_var,
-                                           cfg.bernstein_a_cusum + extra)) \
+                                           cfg.bernstein_a_cusum + extra)
+           + slack * cusum_pos_exp) \
         | (cusum_neg > bernstein_threshold(cusum_neg_var,
-                                           cfg.bernstein_a_cusum + extra))
+                                           cfg.bernstein_a_cusum + extra)
+           + slack * cusum_neg_exp)
     fired = state.fired | (active & hit)
     return DriftState(seen=jnp.where(active, b, state.seen), dev=dev,
                       var=var, expected=expected, dev_recent=dev_recent,
@@ -235,19 +245,24 @@ def anchor_seen(state: DriftState) -> jax.Array:
     return jnp.where(jnp.maximum(s_pos, s_neg) >= 1.0, anchor, state.seen)
 
 
-def scores(state: DriftState, cfg: DriftConfig) -> jax.Array:
+def scores(state: DriftState, cfg: DriftConfig,
+           slack: float = 0.0) -> jax.Array:
     """(M,) normalized change score: the largest of the three test
     statistics over its own threshold — >= 1 means the stream has (or
-    would have) fired."""
+    would have) fired. ``slack`` widens the thresholds exactly as in
+    ``update`` (approximate-backend law tolerance)."""
     extra = _budget_overrun(state.checks, cfg)
     whole = jnp.abs(state.dev) / jnp.maximum(
-        bernstein_threshold(state.var, cfg.bernstein_a + extra), 1e-9)
+        bernstein_threshold(state.var, cfg.bernstein_a + extra)
+        + slack * state.expected, 1e-9)
     pos = state.cusum_pos / jnp.maximum(
         bernstein_threshold(state.cusum_pos_var,
-                            cfg.bernstein_a_cusum + extra), 1e-9)
+                            cfg.bernstein_a_cusum + extra)
+        + slack * state.cusum_pos_exp, 1e-9)
     neg = state.cusum_neg / jnp.maximum(
         bernstein_threshold(state.cusum_neg_var,
-                            cfg.bernstein_a_cusum + extra), 1e-9)
+                            cfg.bernstein_a_cusum + extra)
+        + slack * state.cusum_neg_exp, 1e-9)
     return jnp.maximum(whole, jnp.maximum(pos, neg))
 
 

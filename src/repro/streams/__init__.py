@@ -8,6 +8,6 @@
 #   router   — mixed-batch → per-K bucket scatter (pads/buckets by K)
 #   metering — per-stream ledgers reconciled against the analytic write law
 #              (+ occupancy high-water marks and SLO checks)
-from . import engine, metering, planner, router  # noqa: F401
+from . import engine, logmem, metering, planner, router  # noqa: F401
 from .engine import BatchedReservoirState, StreamEngine, StreamSpec  # noqa: F401
 from .planner import FleetPlan, MixedFleetPlan, plan_fleet, plan_fleet_mixed, waterfill  # noqa: F401

@@ -12,8 +12,11 @@ Heterogeneous fleets (per-stream K) are handled by bucketing streams by K
 (``streams.router``); ``StreamEngine`` runs every bucket inside one jitted
 multi-bucket step, plans placement proactively for the whole fleet
 (``streams.planner``) and meters every transaction per stream
-(``streams.metering``). Per-stream state is O(K), so the engine scales
-linearly in M.
+(``streams.metering``). Per-stream state is O(K) under the default
+``engine="exact"`` backend; huge-K tenants can opt into the O(log K)
+``engine="logmem"`` threshold tracker (``streams.logmem``) per
+``StreamSpec`` — buckets are keyed by (K, engine), and both backends mix
+freely inside one fleet step.
 """
 from __future__ import annotations
 
@@ -27,7 +30,7 @@ import numpy as np
 from repro.core import topk
 from repro.core.costs import NTierCostModel, TwoTierCostModel
 
-from . import metering, planner, router
+from . import logmem, metering, planner, router
 
 PAD_ID = router.PAD_ID
 
@@ -89,7 +92,7 @@ def filtered_update(state: BatchedReservoirState, batch_scores: jax.Array,
     # out *before* top_k so they cannot occupy a survivor slot that a fresh
     # candidate (which plain ``update`` would admit) should get
     batch_ids = batch_ids.astype(jnp.int32)
-    resident = jax.vmap(jnp.isin)(batch_ids, state.ids)
+    resident = jax.vmap(topk.member)(batch_ids, state.ids)
     keep = (mask > 0) & ~resident
     surv = jnp.where(keep, batch_scores.astype(jnp.float32), -jnp.inf)
     top_scores, top_idx = jax.lax.top_k(surv, min(k, w))
@@ -140,12 +143,22 @@ def evicted_ids(old: BatchedReservoirState,
 
 def _make_step(use_kernel_filter: bool, block_n: int, drift_cfg=None,
                bucket_ks: Tuple[int, ...] = (), update_path: str = "auto",
-               with_metrics: bool = False, mesh=None, donate: bool = False):
+               with_metrics: bool = False, mesh=None, donate: bool = False,
+               bucket_engines: Tuple[str, ...] = ()):
     """One jitted step over ALL buckets: states/batches are same-length
     tuples (the pytree structure is static, so the whole fleet advances in
     a single XLA computation). With ``drift_cfg`` (online re-planning) the
     step also advances each bucket's drift-detector state from the chunk's
     write counts — the sequential statistics stay (M,)-batched on device.
+
+    ``bucket_engines`` tags each bucket's backend (empty = all
+    ``"exact"``): ``"logmem"`` buckets carry ``logmem.LogmemState``
+    pytrees and advance through ``logmem.update`` (threshold-compare
+    admission via the ``kernels.logmem_update`` Pallas scan when
+    ``use_kernel_filter``); they report no evictions, their metrics bar
+    is the active threshold ``tau``, and their drift evidence is tested
+    with the backend's ``law_slack`` tolerance folded into the
+    thresholds.
 
     ``update_path`` picks the wide-batch (W >= K) update: "auto" (the
     default) dispatches to ``filtered_update`` — the jnp filter+merge
@@ -188,30 +201,46 @@ def _make_step(use_kernel_filter: bool, block_n: int, drift_cfg=None,
             mstate = metrics_mod.shard_local(mstate)
         new_states, wrotes, evs, new_dstates = [], [], [], []
         for bi, (st, (s, i)) in enumerate(zip(states, batches)):
-            wide = s.shape[1] >= st.scores.shape[1]
-            if wide and (update_path == "auto" or use_kernel_filter):
-                new, wrote = filtered_update(st, s, i, block_n=block_n,
-                                             use_pallas=use_kernel_filter)
+            if bucket_engines and bucket_engines[bi] == "logmem":
+                new, wrote = logmem.update(st, s, i, int(bucket_ks[bi]),
+                                           block_n=block_n,
+                                           use_pallas=use_kernel_filter)
+                # no ids stored → nothing evictable; the meter sees an
+                # empty delete set and occupancy = cumulative writes
+                ev = jnp.full((s.shape[0], 0), PAD_ID, jnp.int32)
+                bar = st.tau
+                slack = logmem.law_slack(bucket_ks[bi])
             else:
-                new, wrote = update(st, s, i)
+                wide = s.shape[1] >= st.scores.shape[1]
+                if wide and (update_path == "auto" or use_kernel_filter):
+                    new, wrote = filtered_update(st, s, i, block_n=block_n,
+                                                 use_pallas=use_kernel_filter)
+                else:
+                    new, wrote = update(st, s, i)
+                ev = evicted_ids(st, new)
+                bar = st.scores[:, -1]
+                slack = 0.0
             new_states.append(new)
             wrotes.append(wrote)
-            ev = evicted_ids(st, new)
             evs.append(ev)
             if drift_cfg is not None:
                 new_dstates.append(drift_mod.update(
                     dstates[bi], wrote.sum(axis=1), new.seen,
-                    float(bucket_ks[bi]), drift_cfg))
+                    float(bucket_ks[bi]), drift_cfg, slack=slack))
             if with_metrics:
                 mstate = metrics_mod.accumulate_bucket(
-                    mstate, s, i, st.scores[:, -1], wrote, ev)
+                    mstate, s, i, bar, wrote, ev)
         if with_metrics:
             if drift_cfg is not None and new_dstates:
                 score_max = jnp.asarray(0.0, jnp.float32)
                 fired = jnp.asarray(0, jnp.int32)
-                for ds in new_dstates:
+                for bi, ds in enumerate(new_dstates):
+                    sl = (logmem.law_slack(bucket_ks[bi])
+                          if bucket_engines and bucket_engines[bi] == "logmem"
+                          else 0.0)
                     score_max = jnp.maximum(
-                        score_max, drift_mod.scores(ds, drift_cfg).max())
+                        score_max,
+                        drift_mod.scores(ds, drift_cfg, slack=sl).max())
                     fired = fired + ds.fired.sum(dtype=jnp.int32)
                 mstate = metrics_mod.accumulate_drift(mstate, score_max,
                                                       fired)
@@ -273,7 +302,14 @@ class StreamSpec:
     with ``migrate`` choosing Algorithm C's cascade at the boundaries — or
     a cost model (two-tier or N-tier topology) for the proactive planner
     to derive both. Streams of different tier depths mix freely in one
-    fleet."""
+    fleet.
+
+    ``engine`` picks the reservoir backend: ``"exact"`` (default) keeps
+    the full (K,) score/id rows; ``"logmem"`` keeps O(log K) state
+    (``streams.logmem`` — huge-K tenants) at a 1−O(1/√K) admission
+    slack. Logmem streams cannot run the migration cascade (no resident
+    ids to cascade) — the planner's derived ``migrate`` is forced off
+    for them and an explicit ``migrate=True`` is rejected."""
 
     stream_id: int
     k: int
@@ -281,6 +317,7 @@ class StreamSpec:
     r: Optional[float] = None
     migrate: bool = False
     boundaries: Optional[Tuple[float, ...]] = None
+    engine: str = "exact"
 
     def explicit_boundaries(self) -> Optional[Tuple[float, ...]]:
         if self.boundaries is not None:
@@ -322,8 +359,18 @@ class StreamEngine:
         by_id = {s.stream_id: s for s in specs}
         if len(by_id) != len(specs):
             raise ValueError("duplicate stream ids")
+        for s in specs:
+            if s.engine not in ("exact", "logmem"):
+                raise ValueError(f"stream {s.stream_id}: unknown engine "
+                                 f"{s.engine!r} (exact|logmem)")
+            if s.engine == "logmem" and s.migrate:
+                raise ValueError(
+                    f"stream {s.stream_id}: engine='logmem' stores no "
+                    "resident ids — the migration cascade needs the exact "
+                    "backend")
         self.buckets = router.bucket_streams(
-            {s.stream_id: s.k for s in specs})
+            {s.stream_id: s.k for s in specs},
+            {s.stream_id: s.engine for s in specs})
         self.router = router.StreamRouter(self.buckets)
         self.constraints = constraints
         # observability (repro.obs): device metric pytree in the step,
@@ -363,7 +410,7 @@ class StreamEngine:
             self.plan = None
         # global row order = bucket order × row order (the meter's layout)
         self._global_rows: List[np.ndarray] = []
-        ks, bounds, migs = [], [], []
+        ks, bounds, migs, logmems = [], [], [], []
         offset = 0
         self._row_of: Dict[int, int] = {}
         self._model_of_row: Dict[int, object] = {}
@@ -376,24 +423,32 @@ class StreamEngine:
                 if spec.cost_model is not None:
                     self._model_of_row[offset + j] = spec.cost_model
                 ks.append(spec.k)
+                logmems.append(spec.engine == "logmem")
                 explicit = spec.explicit_boundaries()
                 if explicit is not None:
                     bounds.append(explicit)
                     migs.append(spec.migrate)
+                elif spec.engine == "logmem":
+                    # planner-derived cascades need resident ids; logmem
+                    # tenants take the plan's boundaries statically
+                    bounds.append(b_of[sid])
+                    migs.append(False)
                 else:
                     bounds.append(b_of[sid])
                     migs.append(mig_of[sid])
             offset += b.m
         self._sid_of_row = {row: sid for sid, row in self._row_of.items()}
-        self.meter = metering.FleetMeter(ks, migrate=migs, boundaries=bounds)
+        self.meter = metering.FleetMeter(ks, migrate=migs, boundaries=bounds,
+                                         logmem=logmems)
         # sharded buckets pad their row count to a multiple of the shard
         # count; pad rows carry (-inf, -1, seen=0) reservoirs and all-pad
         # batches, which every law (update, drift, metrics) treats as
         # inert — host-facing reads slice back to the true m
         self._pad_m: List[int] = [
             (-(-b.m // self._shards)) * self._shards for b in self.buckets]
-        self._states: List[BatchedReservoirState] = [
-            init(pm, b.k) for pm, b in zip(self._pad_m, self.buckets)]
+        self._states: List = [
+            (logmem.init(pm) if b.engine == "logmem" else init(pm, b.k))
+            for pm, b in zip(self._pad_m, self.buckets)]
         if mesh is not None:
             from repro.parallel import fleet
             self._states = [fleet.shard_rows(mesh, st)
@@ -436,16 +491,22 @@ class StreamEngine:
                         mesh, self._metrics_state)
             if obs.config.residuals:
                 from repro.obs.residuals import ResidualMonitor
+                slack_rows = np.where(
+                    self.meter.logmem,
+                    np.array([logmem.law_slack(int(k))
+                              for k in self.meter.ks]), 0.0)
                 self._residuals = ResidualMonitor(
                     self.meter.ks, alpha=obs.config.residual_alpha,
-                    max_checks=obs.config.residual_max_checks)
+                    max_checks=obs.config.residual_max_checks,
+                    law_slack=slack_rows)
         self._step_factory = lambda donate: _make_step(
             use_kernel_filter, block_n,
             drift_cfg=None if replan is None else replan.drift,
             bucket_ks=tuple(b.k for b in self.buckets),
             update_path=update_path,
             with_metrics=self._metrics_state is not None,
-            mesh=mesh, donate=donate)
+            mesh=mesh, donate=donate,
+            bucket_engines=tuple(b.engine for b in self.buckets))
         self._step = self._step_factory(False)
         self._donating_step = None  # built lazily by ingest_chunks
 
@@ -489,11 +550,9 @@ class StreamEngine:
         for bi, (s, i) in enumerate(dense):
             pad = self._pad_m[bi] - s.shape[0]
             if pad:
-                s = np.concatenate(
-                    [s, np.full((pad, s.shape[1]), router.PAD_SCORE,
-                                s.dtype)])
-                i = np.concatenate(
-                    [i, np.full((pad, i.shape[1]), PAD_ID, i.dtype)])
+                ps, pi = router.blank_dense(pad, s.shape[1])
+                s = np.concatenate([s, ps])
+                i = np.concatenate([i, pi])
             out.append((jax.device_put(s, sh), jax.device_put(i, sh)))
         return tuple(out)
 
@@ -526,13 +585,17 @@ class StreamEngine:
         sharded padding back off), drain residuals, maybe re-plan."""
         if meter:
             for bi in range(len(self.buckets)):
-                mb = self.buckets[bi].m
+                b = self.buckets[bi]
+                mb = b.m
                 _, dense_ids = dense[bi]
+                # logmem buckets have no resident ids: no cascade check,
+                # and their (mb, 0) eviction set scatters nothing
+                st_ids = (None if b.engine == "logmem"
+                          else np.asarray(new_states[bi].ids)[:mb])
                 self.meter.record_update(
                     self._global_rows[bi], dense_ids,
                     np.asarray(wrotes[bi])[:mb],
-                    np.asarray(evs[bi])[:mb],
-                    np.asarray(new_states[bi].ids)[:mb])
+                    np.asarray(evs[bi])[:mb], st_ids)
         residual_rows = ()
         if meter and self._residuals is not None:
             # chunk-boundary drain: the alert channel tests the meter's
@@ -664,9 +727,10 @@ class StreamEngine:
                 self._negotiate_admission(int(row), int(dec.n_seen[j]))
             if dec.applied[j]:
                 bi, jb = bucket_of[j], row_in_bucket[j]
+                ids_arg = (None if self.buckets[bi].engine == "logmem"
+                           else np.asarray(self._states[bi].ids[jb]))
                 moved = self.meter.apply_boundaries(
-                    int(row), dec.new_bounds[j],
-                    np.asarray(self._states[bi].ids[jb]))
+                    int(row), dec.new_bounds[j], ids_arg)
                 touched_buckets.add(bi)
             self.replan_events.append(ReplanEvent(
                 stream_id=self._sid_of_row[int(row)], row=int(row),
@@ -687,6 +751,8 @@ class StreamEngine:
         # must be untouched — every affected bucket keeps the sorted-desc
         # score invariant the merge relies on
         for bi in touched_buckets:
+            if self.buckets[bi].engine == "logmem":
+                continue  # no reservoir rows to corrupt
             scores = np.asarray(self._states[bi].scores)
             # note -inf pads diff to NaN on unfull rows — only a strictly
             # positive diff is a genuine order violation
@@ -739,8 +805,10 @@ class StreamEngine:
             raise ValueError("engine built without replan=")
         out = {}
         for bi, b in enumerate(self.buckets):
+            sl = logmem.law_slack(b.k) if b.engine == "logmem" else 0.0
             sc = np.asarray(drift_mod.scores(self._drift_states[bi],
-                                             self.replan_config.drift))
+                                             self.replan_config.drift,
+                                             slack=sl))
             out.update({sid: float(sc[j])
                         for j, sid in enumerate(b.stream_ids)})
         return out
@@ -751,15 +819,23 @@ class StreamEngine:
     def thresholds(self) -> Dict[int, float]:
         out = {}
         for bi, b in enumerate(self.buckets):
-            bars = np.asarray(thresholds(self._states[bi]))
+            bar_fn = (logmem.thresholds if b.engine == "logmem"
+                      else thresholds)
+            bars = np.asarray(bar_fn(self._states[bi]))
             out.update({sid: float(bars[j])
                         for j, sid in enumerate(b.stream_ids)})
         return out
 
     def survivors(self) -> Dict[int, np.ndarray]:
-        """{stream_id: sorted local doc ids currently in the reservoir}."""
+        """{stream_id: sorted local doc ids currently in the reservoir}.
+        Logmem streams store no ids — they report an empty set (their
+        admitted docs live in tiered storage, not in device state)."""
         out = {}
         for bi, b in enumerate(self.buckets):
+            if b.engine == "logmem":
+                for sid in b.stream_ids:
+                    out[sid] = np.empty(0, np.int64)
+                continue
             ids = np.asarray(self._states[bi].ids)
             for j, sid in enumerate(b.stream_ids):
                 v = ids[j]
@@ -785,7 +861,9 @@ class StreamEngine:
         residual metrics (realized / expected / z for the write law;
         realized / expected for the occupancy law)."""
         from repro.obs import residuals as res_mod
-        out: Dict = {"fleet": {"m": self.m, "buckets": len(self.buckets)}}
+        out: Dict = {"fleet": {"m": self.m, "buckets": len(self.buckets),
+                               "logmem_streams":
+                                   int(self.meter.logmem.sum())}}
         if self._metrics_state is not None:
             from repro.obs import metrics as metrics_mod
             out["engine"] = metrics_mod.snapshot(self._metrics_state)
@@ -823,19 +901,25 @@ class StreamEngine:
             out["residuals"]["alerts"] = self._residuals.snapshot()
         return out
 
-    def finalize(self) -> Dict[int, np.ndarray]:
-        """End-of-window: meter the final top-K read per stream (tiered by
-        each stream's r) and return the survivors."""
-        if self._tracer is not None:
-            with self._tracer.span("finalize"):
-                for bi, b in enumerate(self.buckets):
-                    self.meter.record_reads(
-                        self._global_rows[bi],
-                        np.asarray(self._states[bi].ids)[:b.m])
-                return self.survivors()
+    def _record_final_reads(self) -> None:
+        # logmem buckets keep no survivor ids on device — their final
+        # top-K read is issued by the storage layer from the admitted
+        # set, so the meter cannot attribute it per tier here
         for bi, b in enumerate(self.buckets):
+            if b.engine == "logmem":
+                continue
             self.meter.record_reads(self._global_rows[bi],
                                     np.asarray(self._states[bi].ids)[:b.m])
+
+    def finalize(self) -> Dict[int, np.ndarray]:
+        """End-of-window: meter the final top-K read per stream (tiered by
+        each stream's r) and return the survivors. Logmem streams meter
+        no reads (no ids on device) and return empty survivor sets."""
+        if self._tracer is not None:
+            with self._tracer.span("finalize"):
+                self._record_final_reads()
+                return self.survivors()
+        self._record_final_reads()
         return self.survivors()
 
     def finalize_tiers(self, use_pallas: bool = True) -> Dict[int, Dict]:
@@ -846,11 +930,14 @@ class StreamEngine:
         the bucketed gather for issuing per-tier reads. Bit-matches the
         host meter's tier attribution (asserted in tests).
 
-        Returns {stream_id: {"ids", "tiers", "counts"}}.
+        Returns {stream_id: {"ids", "tiers", "counts"}}. Logmem streams
+        are absent (no survivor ids to assign).
         """
         from repro.kernels import tier_assign as ta
         out: Dict[int, Dict] = {}
         for bi, b in enumerate(self.buckets):
+            if b.engine == "logmem":
+                continue
             rows = self._global_rows[bi]
             tier, counts = ta.tier_assign(
                 self._states[bi].ids[:b.m], self.meter.boundaries[rows],

@@ -58,7 +58,8 @@ class FleetMeter:
 
     def __init__(self, ks: Sequence[int], rs: Sequence[float] | None = None,
                  migrate: Sequence[bool] | None = None, *,
-                 boundaries: Sequence[Sequence[float]] | None = None):
+                 boundaries: Sequence[Sequence[float]] | None = None,
+                 logmem: Sequence[bool] | None = None):
         m = len(ks)
         self.ks = np.asarray(ks, np.int64)
         if boundaries is None:
@@ -70,6 +71,13 @@ class FleetMeter:
         self.n_tiers = self.boundaries.shape[1] + 1
         self.migrate = (np.zeros(m, bool) if migrate is None
                         else np.asarray(migrate, bool))
+        # O(log K) logmem backend rows: the engine reports no evictions
+        # and no final-read ids for them (it stores no ids), so their
+        # occupancy equals cumulative writes and the occupancy residual
+        # law switches to the per-tier expected-writes form
+        # (obs.residuals); logmem + migrate is rejected by the engine
+        self.logmem = (np.zeros(m, bool) if logmem is None
+                       else np.asarray(logmem, bool))
         self.floor = np.zeros(m, np.int64)  # highest fired boundary per stream
         self.observed = np.zeros(m, np.int64)
         self.writes = np.zeros((m, self.n_tiers), np.int64)
@@ -191,6 +199,11 @@ class FleetMeter:
         final read all follow the new boundaries. Migrating (cascade)
         streams cannot be re-planned (the floor semantics would be
         ambiguous). Returns the number of relocated residents.
+
+        Logmem rows (``state_ids=None``) only swap the boundary vector:
+        the backend stores no resident ids, so already-written docs stay
+        in the tier they were written to (nothing relocatable) and only
+        future writes follow the new placement. Returns 0.
         """
         if self.migrate[row]:
             raise ValueError(f"stream row {row} runs a migration cascade — "
@@ -203,6 +216,13 @@ class FleetMeter:
             raise ValueError(f"stream row {row}: {len(bs)} boundaries "
                              f"exceed the fleet-wide maximum depth "
                              f"{self.boundaries.shape[1]}")
+        if state_ids is None:
+            if not self.logmem[row]:
+                raise ValueError(f"stream row {row}: state_ids required "
+                                 "for exact-backend re-planning")
+            self.boundaries[row, :] = np.inf
+            self.boundaries[row, : len(bs)] = bs
+            return 0
         ids = np.asarray(state_ids).reshape(-1)
         ids = ids[ids >= 0]
         old_tiers = (ids[:, None] >= self.boundaries[row][None, :]).sum(1)

@@ -26,29 +26,48 @@ PAD_ID = -1
 
 @dataclass(frozen=True)
 class Bucket:
-    """All streams sharing one reservoir width K. ``stream_ids[row]`` maps
-    the bucket-local row back to the global stream id."""
+    """All streams sharing one reservoir width K *and* one engine
+    backend (``"exact"`` O(K) reservoir or ``"logmem"`` O(log K)
+    threshold tracker — the per-bucket state pytrees differ, so mixed
+    backends cannot share a bucket). ``stream_ids[row]`` maps the
+    bucket-local row back to the global stream id."""
 
     k: int
     stream_ids: Tuple[int, ...]
+    engine: str = "exact"
 
     @property
     def m(self) -> int:
         return len(self.stream_ids)
 
 
-def bucket_streams(ks: Dict[int, int]) -> List[Bucket]:
-    """Group streams (stream_id → K) into per-K buckets, K ascending and
-    rows ordered by stream id — deterministic layout."""
-    by_k: Dict[int, List[int]] = {}
+def bucket_streams(ks: Dict[int, int],
+                   engines: Dict[int, str] | None = None) -> List[Bucket]:
+    """Group streams (stream_id → K, optionally stream_id → engine) into
+    per-(K, engine) buckets, ordered by (K, engine) ascending and rows
+    ordered by stream id — deterministic layout."""
+    by_key: Dict[Tuple[int, str], List[int]] = {}
     for sid, k in ks.items():
-        by_k.setdefault(int(k), []).append(int(sid))
-    return [Bucket(k=k, stream_ids=tuple(sorted(by_k[k])))
-            for k in sorted(by_k)]
+        eng = engines.get(sid, "exact") if engines else "exact"
+        by_key.setdefault((int(k), str(eng)), []).append(int(sid))
+    return [Bucket(k=k, stream_ids=tuple(sorted(by_key[(k, eng)])),
+                   engine=eng)
+            for k, eng in sorted(by_key)]
 
 
 def _next_pow2(x: int) -> int:
     return 1 << max(int(x) - 1, 0).bit_length() if x > 1 else 1
+
+
+def blank_dense(m: int, w: int) -> Tuple[np.ndarray, np.ndarray]:
+    """(scores (m, w) f32, doc_ids (m, w) i32) of all-pad rows — the one
+    inert filler every staging path shares: ``route`` scatters live docs
+    into it, and the engine's shard padding appends whole blank rows.
+    Every law (update, drift, metrics, meter) treats (PAD_SCORE, PAD_ID)
+    entries as absent; tests assert the inertness through both engine
+    backends."""
+    return (np.full((m, w), PAD_SCORE, np.float32),
+            np.full((m, w), PAD_ID, np.int32))
 
 
 class StreamRouter:
@@ -119,8 +138,7 @@ class StreamRouter:
             w = _next_pow2(max(width, 1))
             if pad_to is not None:
                 w = max(w, int(pad_to))
-            dense_s = np.full((bucket.m, w), PAD_SCORE, np.float32)
-            dense_i = np.full((bucket.m, w), PAD_ID, np.int32)
+            dense_s, dense_i = blank_dense(bucket.m, w)
             dense_s[rs, pos] = scores[sel][order]
             dense_i[rs, pos] = doc_ids[sel][order]
             out.append((dense_s, dense_i))

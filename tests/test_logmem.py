@@ -1,0 +1,388 @@
+"""repro.streams.logmem — the O(log K) reservoir backend: the fused
+admission kernel vs its oracles, the threshold-update invariants, the
+competitive-ratio trace harness, pad inertness through both call sites
+of ``router.blank_dense``, mixed exact/logmem fleets, and the
+law-slack-widened drift/residual channels."""
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.logmem_update import ops as lm_ops
+from repro.kernels.logmem_update import ref as lm_ref
+from repro.obs import Observability, ObsConfig
+from repro.online import DriftConfig, drift
+from repro.streams import StreamEngine, StreamSpec, engine, logmem, \
+    metering, router
+
+
+# ---------------------------------------------------------------------------
+# kernel parity: pallas (interpret off-TPU) vs jnp ref vs numpy oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,n,bn", [(1, 128, 128), (3, 500, 128),
+                                    (8, 1024, 512), (5, 777, 256)])
+def test_logmem_admit_matches_ref_and_oracle(m, n, bn):
+    rng = np.random.default_rng(m * 1000 + n)
+    scores = rng.standard_normal((m, n)).astype(np.float32)
+    ids = np.tile(np.arange(n, dtype=np.int32), (m, 1))
+    ids[rng.random((m, n)) < 0.1] = lm_ops.PAD_ID  # scattered pads
+    tau = rng.uniform(-1, 1, m).astype(np.float32)
+    tau[0] = -np.inf  # cold stream: every live doc admits
+    out_k = lm_ops.logmem_admit(jnp.asarray(scores), jnp.asarray(ids),
+                                jnp.asarray(tau), block_n=bn,
+                                use_pallas=True)
+    out_r = lm_ops.logmem_admit(jnp.asarray(scores), jnp.asarray(ids),
+                                jnp.asarray(tau), block_n=bn,
+                                use_pallas=False)
+    for a, b in zip(out_k, out_r):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    mask, acounts, lcounts, tmax = (np.asarray(x) for x in out_k)
+    live = ids >= 0
+    hit = live & (scores > tau[:, None])
+    np.testing.assert_array_equal(mask.astype(bool), hit)
+    np.testing.assert_array_equal(acounts.sum(1), hit.sum(1))
+    np.testing.assert_array_equal(lcounts.sum(1), live.sum(1))
+    row_max = np.where(live.any(1),
+                       np.where(live, scores, -np.inf).max(1), -np.inf)
+    np.testing.assert_allclose(tmax.max(1), row_max)
+
+
+def test_logmem_admit_gates_on_ids_not_score_sentinel():
+    """Unlike batched_topk's unfull-reservoir convention, the logmem scan
+    must keep pads inert even under a -inf threshold AND even if a pad
+    column carries a finite score (the id is the ground truth)."""
+    scores = jnp.array([[5.0, 1.0, 7.0, 2.0]], jnp.float32)
+    ids = jnp.array([[0, -1, 1, -1]], jnp.int32)
+    tau = jnp.array([-jnp.inf], jnp.float32)
+    mask, acounts, lcounts, _ = lm_ops.logmem_admit(scores, ids, tau,
+                                                    block_n=128)
+    np.testing.assert_array_equal(np.asarray(mask)[0], [1, 0, 1, 0])
+    assert int(np.asarray(acounts).sum()) == 2
+    assert int(np.asarray(lcounts).sum()) == 2
+
+
+# ---------------------------------------------------------------------------
+# update law: admit-all pre-K, crossing-chunk budget, floor invariants
+# ---------------------------------------------------------------------------
+
+def test_logmem_update_admits_everything_before_k():
+    k, m, w = 16, 2, 8
+    st = logmem.init(m)
+    sc = jnp.asarray(np.random.default_rng(0)
+                     .standard_normal((m, w)).astype(np.float32))
+    ids = jnp.tile(jnp.arange(w, dtype=jnp.int32), (m, 1))
+    st, wrote = logmem.update(st, sc, ids, k, use_pallas=False)
+    assert np.asarray(wrote).all()  # t <= K: reservoir-fill phase
+    np.testing.assert_array_equal(np.asarray(st.seen), [w, w])
+    np.testing.assert_array_equal(np.asarray(st.admits), [w, w])
+    assert np.isneginf(np.asarray(st.tau)).all()  # still cold
+
+
+def test_logmem_crossing_chunk_admits_the_chunk_law_budget():
+    """The chunk that crosses t = K has no threshold yet; it must admit
+    exactly the hypergeometric chunk-law mean (top-B by score), keeping
+    the admit counts on the closed-form write law."""
+    k, m, w = 16, 3, 24
+    rng = np.random.default_rng(1)
+    st = logmem.init(m)
+    sc0 = jnp.asarray(rng.standard_normal((m, k)).astype(np.float32))
+    st, _ = logmem.update(st, sc0, jnp.tile(jnp.arange(k, dtype=jnp.int32),
+                                            (m, 1)), k, use_pallas=False)
+    sc1 = jnp.asarray(rng.standard_normal((m, w)).astype(np.float32))
+    ids1 = jnp.tile(jnp.arange(k, k + w, dtype=jnp.int32), (m, 1))
+    st, wrote = logmem.update(st, sc1, ids1, k, use_pallas=False)
+    t = k + w
+    budget = round(min(t, k) * w / t)
+    np.testing.assert_array_equal(np.asarray(wrote).sum(1),
+                                  np.full(m, budget))
+    # the admitted set is the chunk's top-B by score
+    wr = np.asarray(wrote)
+    s1 = np.asarray(sc1)
+    for row in range(m):
+        top = np.sort(s1[row])[-budget:]
+        np.testing.assert_allclose(np.sort(s1[row][wr[row]]), top)
+
+
+def test_logmem_floor_monotone_tau_above_floor_and_phase_ledger():
+    k, m, chunk, n = 32, 4, 128, 8192
+    rng = np.random.default_rng(2)
+    st = logmem.init(m)
+    prev_floor = np.asarray(st.tau_floor).copy()
+    prev_phase = np.asarray(st.phase).copy()
+    for start in range(0, n, chunk):
+        sc = jnp.asarray(rng.standard_normal((m, chunk)).astype(np.float32))
+        ids = jnp.tile(jnp.arange(start, start + chunk, dtype=jnp.int32),
+                       (m, 1))
+        st, _ = logmem.update(st, sc, ids, k, use_pallas=False)
+        floor = np.asarray(st.tau_floor)
+        phase = np.asarray(st.phase)
+        assert (floor >= prev_floor).all() | np.isneginf(prev_floor).all()
+        assert (phase >= prev_phase).all()
+        assert (np.asarray(st.tau) >= floor).all()
+        prev_floor, prev_phase = floor, phase
+    # the phase ledger partitions the admit total (O(log K) diagnostics)
+    np.testing.assert_array_equal(np.asarray(st.phase_admits).sum(1),
+                                  np.asarray(st.admits))
+    assert (np.asarray(st.phase) >= 0).all()
+    assert np.isfinite(np.asarray(st.tau)).all()
+
+
+# ---------------------------------------------------------------------------
+# pad inertness through both call sites of router.blank_dense
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["exact", "logmem"])
+def test_blank_dense_rows_are_inert_in_both_backends(backend):
+    """The shard-padding call site (`engine._stage_batches`) appends whole
+    ``blank_dense`` rows; an all-pad chunk must leave either backend's
+    state bitwise untouched and report no writes."""
+    m, k, w = 3, 8, 16
+    ps, pi = router.blank_dense(m, w)
+    assert (pi == router.PAD_ID).all() and np.isneginf(ps).all()
+    if backend == "logmem":
+        st = logmem.init(m)
+        # advance past cold start so tau is live (pads must still be inert
+        # under a finite threshold)
+        rng = np.random.default_rng(3)
+        for c in range(4):
+            sc = jnp.asarray(rng.standard_normal((m, w)).astype(np.float32))
+            ids = jnp.tile(jnp.arange(c * w, (c + 1) * w, dtype=jnp.int32),
+                           (m, 1))
+            st, _ = logmem.update(st, sc, ids, k, use_pallas=False)
+        st2, wrote = logmem.update(st, jnp.asarray(ps), jnp.asarray(pi), k,
+                                   use_pallas=False)
+    else:
+        st = engine.init(m, k)
+        st, _ = engine.update(st, jnp.asarray(
+            np.random.default_rng(3).standard_normal((m, w))
+            .astype(np.float32)),
+            jnp.tile(jnp.arange(w, dtype=jnp.int32), (m, 1)))
+        st2, wrote = engine.update(st, jnp.asarray(ps), jnp.asarray(pi))
+    assert not np.asarray(wrote).any()
+    for a, b in zip(st, st2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_router_route_pads_match_blank_dense():
+    """The router call site: ``route`` scatters live docs into a
+    ``blank_dense`` canvas, so its pad entries must be exactly the shared
+    sentinel pair (one filler, one inertness contract)."""
+    rt = router.StreamRouter(router.bucket_streams(
+        {0: 4, 1: 4}, {0: "exact", 1: "logmem"}))
+    routed = rt.route([0, 1, 0, 1, 0, 1], [1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
+                      [0, 0, 1, 1, 2, 2])
+    assert len(routed) == 2  # same K, different engine => distinct buckets
+    for bi in range(2):
+        ds, di = routed[bi]
+        assert ds.shape == (1, 4)  # 3 docs -> pow2 pad to 4
+        ps, pi = router.blank_dense(*ds.shape)
+        np.testing.assert_array_equal(ds[:, 3:], ps[:, 3:])
+        np.testing.assert_array_equal(di[:, 3:], pi[:, 3:])
+
+
+# ---------------------------------------------------------------------------
+# trace harness: 1 - c/sqrt(K) competitive ratio + write-law admits
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k,chunk", [(256, 128), (1024, 512)])
+def test_trace_competitive_ratio_within_guarantee(k, chunk):
+    rng = np.random.default_rng(k)
+    n = 16 * k
+    traces = rng.standard_normal((3, n)).astype(np.float32)
+    out = logmem.trace_competitive_ratio(traces, k, chunk)
+    slack = logmem.law_slack(k)
+    assert out["min_ratio"] >= 1.0 - slack  # ratio >= 1 - c/sqrt(K)
+    assert out["max_c"] <= logmem.LAW_SLACK_C
+    assert np.abs(out["admit_ratio"] - 1.0).max() <= 3.0 * slack
+    assert out["bytes_per_stream"] * 8.0 <= out["exact_bytes_per_stream"]
+
+
+def test_logmem_memory_is_o_log_k():
+    st = logmem.init(8)
+    bps = logmem.state_bytes_per_stream(st)
+    # K-independent state: the acceptance floor is >= 8x at K = 4096 and
+    # grows linearly with K from there
+    assert logmem.exact_bytes_per_stream(4096) / bps >= 8.0
+    assert logmem.exact_bytes_per_stream(65536) / bps >= 128.0
+    assert logmem.state_bytes_per_stream(logmem.init(64)) == bps
+
+
+# ---------------------------------------------------------------------------
+# mixed exact/logmem fleets through the StreamEngine
+# ---------------------------------------------------------------------------
+
+def _mixed_fleet(docs=192, batch=8, seed=5):
+    rng = np.random.default_rng(seed)
+    specs = [StreamSpec(stream_id=i, k=4, r=float(docs / 2))
+             for i in range(6)]
+    specs += [StreamSpec(stream_id=100 + i, k=64, r=float(docs / 2),
+                         engine="logmem") for i in range(5)]
+    traces = rng.standard_normal((len(specs), docs)).astype(np.float32)
+    return specs, traces, rng
+
+
+def _ingest_mixed(eng, specs, traces, batch, rng, only_sids=None):
+    sids = np.array([s.stream_id for s in specs])
+    keep = (np.isin(sids, list(only_sids)) if only_sids is not None
+            else np.ones(sids.size, bool))
+    m, docs = traces.shape
+    for t in range(0, docs, batch):
+        ms = np.repeat(sids[keep], batch)
+        md = np.tile(np.arange(t, t + batch), int(keep.sum()))
+        sc = traces[keep, t:t + batch].reshape(-1)
+        perm = rng.permutation(ms.size)
+        eng.ingest(ms[perm], sc[perm], md[perm])
+
+
+def test_mixed_engine_fleet_exact_bucket_unchanged():
+    """Adding logmem tenants to a fleet must not perturb the exact
+    streams: their survivors are bitwise those of an exact-only replay,
+    and the logmem rows land on their own contract (empty survivors, no
+    deletes, occupancy == cumulative writes)."""
+    specs, traces, rng = _mixed_fleet()
+    exact_sids = {s.stream_id for s in specs if s.engine == "exact"}
+    mixed = StreamEngine(specs, obs=Observability(ObsConfig()))
+    alone = StreamEngine([s for s in specs if s.engine == "exact"])
+    rng2 = np.random.default_rng(5)
+    _ingest_mixed(mixed, specs, traces, 8, rng)
+    _ingest_mixed(alone, specs, traces, 8,
+                  np.random.default_rng(5), only_sids=exact_sids)
+    s_mixed, s_alone = mixed.finalize(), alone.finalize()
+    for sid in exact_sids:
+        np.testing.assert_array_equal(s_mixed[sid], s_alone[sid])
+    bars = mixed.thresholds()
+    for s in specs:
+        row = mixed.stream_row(s.stream_id)
+        if s.engine == "logmem":
+            assert s_mixed[s.stream_id].size == 0
+            assert mixed.meter.deletes[row].sum() == 0
+            assert (mixed.meter.writes[row].sum()
+                    == mixed.meter.occupancy[row].sum())
+            assert np.isfinite(bars[s.stream_id])  # past cold start
+        assert mixed.meter.observed[row] == traces.shape[1]
+    snap = mixed.obs_snapshot()
+    assert snap["fleet"]["logmem_streams"] == 5
+    # slack-widened write-law residual: z stays O(1) on an undrifted fleet
+    assert snap["residuals"]["writes"]["max_abs_z"] < 4.0
+    assert snap["residuals"]["alerts"]["alerted"] == 0
+    # logmem tiers absent from the device-side finalize assignment
+    assert set(mixed.finalize_tiers()) == exact_sids
+
+
+def test_logmem_spec_validation():
+    with pytest.raises(ValueError, match="migration cascade"):
+        StreamEngine([StreamSpec(stream_id=0, k=8, r=4.0, engine="logmem",
+                                 migrate=True)])
+    with pytest.raises(ValueError, match="unknown engine"):
+        StreamEngine([StreamSpec(stream_id=0, k=8, r=4.0, engine="approx")])
+
+
+def test_meter_apply_boundaries_logmem_swaps_without_ids():
+    meter = metering.FleetMeter([4, 4], boundaries=[(2.0,), (2.0,)],
+                                logmem=[False, True])
+    # logmem row: boundary-vector swap only, nothing relocatable
+    assert meter.apply_boundaries(1, (3.0,), None) == 0
+    assert meter.boundaries[1, 0] == 3.0
+    assert meter.relocations[1] == 0
+    # exact row: resident ids are required to re-tier
+    with pytest.raises(ValueError, match="state_ids required"):
+        meter.apply_boundaries(0, (3.0,), None)
+
+
+# ---------------------------------------------------------------------------
+# slack-widened alert channels: null FPR and drifted detection
+# ---------------------------------------------------------------------------
+
+def _logmem_engine(m, k, replan=False):
+    specs = [StreamSpec(stream_id=i, k=k, r=float(2 * k), engine="logmem")
+             for i in range(m)]
+    kw = {}
+    if replan:
+        from repro.online import ReplanConfig
+        kw["replan"] = ReplanConfig(drift=DriftConfig(alpha=0.05))
+    return StreamEngine(specs, obs=Observability(ObsConfig()), **kw)
+
+
+def _dense_chunks(eng, traces, chunk):
+    m, n = traces.shape
+    for start in range(0, n, chunk):
+        ids = np.tile(np.arange(start, start + chunk, dtype=np.int32),
+                      (m, 1))
+        eng.ingest_dense([(traces[:, start:start + chunk], ids)])
+
+
+def test_residual_monitor_null_fpr_on_undrifted_logmem_fleet():
+    m, k, n, chunk = 8, 256, 4096, 256
+    rng = np.random.default_rng(6)
+    eng = _logmem_engine(m, k, replan=True)
+    traces = rng.standard_normal((m, n)).astype(np.float32)
+    _dense_chunks(eng, traces, chunk)
+    # i.u.d. arrivals: neither the residual monitor nor the device drift
+    # detector may fire through the slack-widened thresholds
+    assert eng._residuals.alerted.sum() == 0
+    assert eng.residual_alerts() == {}
+    assert max(eng.drift_scores().values()) < 1.0
+    assert eng.replan_events == []
+    z = eng._residuals.write_z()
+    assert np.abs(z["z"]).max() < 4.0
+
+
+def test_residual_monitor_fires_on_drifted_logmem_fleet():
+    """A monotone-increasing score trace beats any committed threshold:
+    admits blow past the write law and the slack-widened residual channel
+    must still alert (drift stays visible through the slack)."""
+    m, k, n, chunk = 4, 256, 4096, 256
+    rng = np.random.default_rng(7)
+    eng = _logmem_engine(m, k)
+    drifted = (np.arange(n, dtype=np.float32)[None, :] * 0.01
+               + rng.standard_normal((m, n)).astype(np.float32) * 0.1)
+    _dense_chunks(eng, drifted, chunk)
+    assert eng._residuals.alerted.all()
+    assert len(eng.residual_alerts()) == m
+
+
+def test_drift_detector_slack_absorbs_law_bias_but_not_drift():
+    """Unit check of the detector's slack term: a write sequence biased
+    by exactly the logmem tolerance stays quiet under slack=law_slack
+    but fires at slack=0; an 8x rate drift fires through the slack."""
+    k, chunk, steps = 256, 256, 24
+    slack = logmem.law_slack(k)
+    cfg = DriftConfig(alpha=0.01)
+    st_slack, st_zero, st_drift = (drift.init(1) for _ in range(3))
+    seen = 0
+    for _ in range(steps):
+        before, seen = seen, seen + chunk
+        mean, _ = drift.chunk_law(jnp.asarray([float(before)]),
+                                  jnp.asarray([float(seen)]), float(k))
+        biased = mean * (1.0 + slack)
+        st_slack = drift.update(st_slack, biased, jnp.asarray([seen]),
+                                float(k), cfg, slack=slack)
+        st_zero = drift.update(st_zero, biased, jnp.asarray([seen]),
+                               float(k), cfg, slack=0.0)
+        st_drift = drift.update(st_drift, mean * 8.0, jnp.asarray([seen]),
+                                float(k), cfg, slack=slack)
+    assert not bool(np.asarray(st_slack.fired)[0])
+    assert bool(np.asarray(st_zero.fired)[0])
+    assert bool(np.asarray(st_drift.fired)[0])
+
+
+def test_occupancy_residual_law_switches_for_logmem_rows():
+    """occupancy_residuals must reference the per-tier write-law deltas
+    for logmem rows (occupancy == cumulative writes, no deletes), not the
+    exact backend's peak-occupancy law."""
+    from repro.obs import residuals as res_mod
+    m, k, n, chunk = 4, 64, 2048, 128
+    eng = _logmem_engine(m, k)
+    rng = np.random.default_rng(8)
+    _dense_chunks(eng, rng.standard_normal((m, n)).astype(np.float32), chunk)
+    occ = res_mod.occupancy_residuals(eng.meter, batch=chunk)
+    assert np.isfinite(occ["normalized"]).all()
+    # realized storage grows past K (never deletes) yet tracks the law
+    assert (occ["realized"].sum(1) > k).all()
+    assert np.abs(occ["normalized"]).max() < 3.0 * logmem.law_slack(k) + 0.15
+    row = eng.stream_row(0)
+    exp = res_mod.expected_tier_writes(eng.meter.boundaries[row], n, k,
+                                       batch=chunk)
+    np.testing.assert_allclose(occ["expected"][row], exp)

@@ -1,5 +1,6 @@
 """repro.parallel — fleet-axis sharding. Sharded-vs-single-device bit
-identity for the engine step (reservoir + metrics + drift state), the
+identity for the engine step (reservoir + metrics + drift state, incl.
+mixed exact/logmem fleets with padded logmem buckets), the
 candidate-grid solve, and the online suffix re-solve; the cross-shard
 water-filling never-oversubscribes property; sharded metrics
 aggregation; double-buffered ingest equality. Mesh tests skip unless
@@ -92,6 +93,36 @@ def test_engine_sharded_bit_identity(m):
     traces = rng.standard_normal((m, 48)).astype(np.float32)
     _mixed_ingest([ref, shd], specs, traces, batch=6, rng=rng)
     _assert_engines_identical(ref, shd)
+
+
+@needs_mesh
+@pytest.mark.parametrize("m", [6, 13])
+def test_engine_sharded_logmem_bit_identity(m):
+    """Mixed exact + logmem fleet (M not a multiple of the shard count,
+    so the logmem bucket gets blank_dense pad rows): survivors, meter
+    ledgers, obs snapshots, and the logmem acceptance thresholds must be
+    bitwise equal to the unsharded engine's — and the pad rows must stay
+    inert through the threshold-update path."""
+    mesh = _mesh()
+    rng = np.random.default_rng(200 + m)
+
+    def build(mesh):
+        specs = [StreamSpec(stream_id=i, k=32, r=48.0, engine="logmem")
+                 if i % 3 == 2 else StreamSpec(stream_id=i, k=4, r=48.0)
+                 for i in range(m)]
+        obs = Observability(ObsConfig())
+        return StreamEngine(specs, obs=obs, mesh=mesh), specs
+
+    ref, specs = build(None)
+    shd, _ = build(mesh)
+    traces = rng.standard_normal((m, 96)).astype(np.float32)
+    _mixed_ingest([ref, shd], specs, traces, batch=8, rng=rng)
+    _assert_engines_identical(ref, shd)
+    assert ref.thresholds() == shd.thresholds()
+    lm = [bi for bi, b in enumerate(shd.buckets) if b.engine == "logmem"]
+    assert len(lm) == 1
+    pads = np.asarray(shd._states[lm[0]].seen)[shd.buckets[lm[0]].m:]
+    assert (pads == 0).all()
 
 
 @needs_mesh

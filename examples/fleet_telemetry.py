@@ -80,7 +80,7 @@ def main():
                                      [(args.drift_at, args.multiplier)])
         for _ in range(args.streams)])
 
-    obs = Observability(ObsConfig(residual_alpha=args.alpha))
+    obs = Observability(ObsConfig(residual_alpha=args.alpha, costs=True))
     t0 = time.time()
     engine = run_once(traces, specs, args, obs)
     print(f"fleet of {args.streams} x {args.docs} docs "
@@ -116,13 +116,20 @@ def main():
           f"filter_pass_rate={em['filter_pass_rate']:.3f} "
           f"chunks={em['chunks']}")
 
+    # --- per-tenant cost attribution: realized vs planned regret ---------
+    print()
+    print(evaluate.format_regret_table(evaluate.regret_table(engine)))
+    cm = engine.cost_summary()
+    if not np.all(np.isfinite(cm["regret"])):
+        failures.append("non-finite regret in the cost summary")
+
     paths = obs.write(args.out)
     print("obs artifacts: " + ", ".join(sorted(paths.values())))
 
     # --- jit-cache introspection: identical config must be all hits ------
     before = {name: p["misses"] for name, p in jits.snapshot().items()}
     run_once(traces, specs, args, Observability(ObsConfig(
-        residual_alpha=args.alpha)))
+        residual_alpha=args.alpha, costs=True)))
     after = jits.snapshot()
     for name, p in sorted(after.items()):
         new_misses = p["misses"] - before.get(name, 0)

@@ -99,6 +99,15 @@ def main():
                     help="enable the repro.obs telemetry layer and write "
                          "metrics.json / metrics.prom (Prometheus text "
                          "exposition) / events.jsonl artifacts to DIR")
+    ap.add_argument("--obs-port", type=int, default=None, metavar="PORT",
+                    help="serve live /metrics (Prometheus) and /snapshot "
+                         "(JSON) from the running engine on this port "
+                         "(0 = ephemeral); implies the obs layer with "
+                         "cost attribution on")
+    ap.add_argument("--obs-hold", type=float, default=0.0, metavar="SEC",
+                    help="stretch the serving loop over at least SEC "
+                         "seconds so a scraper can observe the live "
+                         "counters advancing (CI smoke)")
     ap.add_argument("--mesh", type=int, default=1,
                     help="shard the tenant fleet across an N-device CPU "
                          "mesh (forced via XLA_FLAGS before jax loads); "
@@ -113,10 +122,17 @@ def main():
         mesh = fleet.fleet_mesh(args.mesh)
         print(f"fleet mesh: {args.mesh} devices, tenant axis sharded")
 
-    obs = None
-    if args.obs_out is not None:
+    obs = obs_server = None
+    if args.obs_out is not None or args.obs_port is not None:
         from repro.obs import Observability, ObsConfig
-        obs = Observability(ObsConfig())
+        # the live dashboard prices the fleet as it serves — cost
+        # attribution rides along whenever the endpoint is requested
+        obs = Observability(ObsConfig(costs=args.obs_port is not None))
+    if args.obs_port is not None:
+        from repro.obs import http as obs_http
+        obs_server = obs_http.serve(obs, port=args.obs_port)
+        print(f"obs endpoint: {obs_server.url}/metrics "
+              f"{obs_server.url}/snapshot", flush=True)
 
     cfg = configs.get_config(args.arch, reduced=True)
     params = lm.init_params(cfg, jax.random.PRNGKey(0))
@@ -148,6 +164,7 @@ def main():
     rng = np.random.default_rng(0)
 
     served = 0
+    n_batches = -(-args.requests // args.batch)
     t0 = time.time()
     while served < args.requests:
         b = min(args.batch, args.requests - served)
@@ -173,6 +190,8 @@ def main():
             payloads = np.concatenate([prompts, np.asarray(gen)], axis=1)
             curator.observe_batch(ids, scores, payloads)
         served += b
+        if args.obs_hold > 0:
+            time.sleep(args.obs_hold / n_batches)
     dt = time.time() - t0
 
     print(f"served {served} requests in {dt:.1f}s "
@@ -186,6 +205,11 @@ def main():
         hist = engine.plan.strategy_histogram()
         print("per-stream strategies: "
               + ", ".join(f"{s}={c}" for s, c in sorted(hist.items())))
+        if obs is not None and obs.config.costs:
+            summ = engine.cost_summary()
+            print(f"cost attribution: realized={summ['total'].sum():.3e} "
+                  f"planned={summ['planned'].sum():.3e} "
+                  f"regret={summ['regret'].sum():+.3e}")
         for t in sorted(survivors)[:4]:
             reqs = (np.asarray(survivors[t]) * args.tenants + t).tolist()
             print(f"tenant {t}: top-{tenant_specs[t].k} retained requests "
@@ -198,7 +222,7 @@ def main():
         retained = curator.finalize()
         print(f"top-{args.topk} most-uncertain requests retained for review: "
               f"{sorted(retained)}")
-    if obs is not None:
+    if obs is not None and args.obs_out is not None:
         paths = obs.write(args.obs_out)
         snap = obs.snapshot()
         jit = snap.get("jit", {})
@@ -207,6 +231,8 @@ def main():
             for name, p in sorted(jit.items())) if jit else
             "obs: no jit probes fired")
         print("obs artifacts: " + ", ".join(sorted(paths.values())))
+    if obs_server is not None:
+        obs_server.stop()
 
 
 if __name__ == "__main__":

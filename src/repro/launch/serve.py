@@ -8,7 +8,9 @@ retention to the multi-tenant ``repro.streams`` fleet engine (one jitted
 step advances all M tenant reservoirs); ``--mesh N`` shards that tenant
 axis across an N-device mesh (forced CPU devices off-hardware) — the
 ``--obs-out`` artifacts then carry the cross-shard aggregated counters,
-never one shard's block.
+never one shard's block. ``--obs-port`` serves live ``/metrics``
+(Prometheus) and ``/snapshot`` (JSON) from the running engine with cost
+attribution on (``repro.obs.http``).
 """
 from __future__ import annotations
 
@@ -33,6 +35,10 @@ def main():
                     help="enable repro.obs telemetry and write the "
                          "metrics.json / metrics.prom / events.jsonl "
                          "artifacts to DIR")
+    ap.add_argument("--obs-port", type=int, default=None, metavar="PORT",
+                    help="serve live /metrics and /snapshot from the "
+                         "running engine (0 = ephemeral port); implies "
+                         "obs with cost attribution")
     args, extra = ap.parse_known_args()
     import repro  # noqa: F401 — ensure PYTHONPATH is sane before spawning
     import os
@@ -56,6 +62,8 @@ def main():
             ).strip()
     if args.obs_out is not None:
         cmd += ["--obs-out", args.obs_out]
+    if args.obs_port is not None:
+        cmd += ["--obs-port", str(args.obs_port)]
     raise SystemExit(subprocess.call(cmd + extra, env=env))
 
 

@@ -7,6 +7,9 @@
 #   residuals — realized vs closed-form expectation + z-scores for the
 #               write/occupancy/latency laws; ResidualMonitor alert
 #               channel (concentration-bound, fires at or before CUSUM)
+#   costs     — device-side CostState ledger + closed-form expected-cost
+#               trajectories, per-tenant regret, and budget burn-rate
+#               alerts (CostMonitor)
 #   trace     — span/event timeline with a stable JSONL schema and
 #               jax.profiler TraceAnnotation integration
 #   jits      — jit-cache hit/miss + compile-time probes (shp_jax,
@@ -49,7 +52,14 @@ class ObsConfig:
     (per-chunk host update from the meter drain). ``residual_trigger``:
     feed residual alerts to the ``Replanner`` as an earlier trigger
     (requires the engine's ``replan=`` config; alerts then reset like
-    detector evidence). ``events_path``: stream the event log to this
+    detector evidence). ``costs``: carry the device ``CostState``
+    ledger through the jitted step and maintain the ``CostMonitor``
+    cost-residual / budget burn-rate alert channel (``obs.costs``).
+    ``cost_trigger``: union cost/burn alerts into the re-plan trigger
+    exactly like ``residual_trigger``. ``budget_factor``: overspend
+    budget — burn alerts require realized > threshold × budget_factor ×
+    planned on both windows of a ``burn_windows`` (long, short,
+    threshold) pair. ``events_path``: stream the event log to this
     JSONL file. ``profiler_annotations``: mirror spans into the JAX
     profiler timeline. ``trace_ingest``: record a span per ingest chunk
     (point events for replan/admission/violations are always recorded).
@@ -60,6 +70,12 @@ class ObsConfig:
     residual_alpha: float = 0.01
     residual_max_checks: int = 1024
     residual_trigger: bool = False
+    costs: bool = False
+    cost_alpha: float = 0.01
+    cost_max_checks: int = 1024
+    cost_trigger: bool = False
+    budget_factor: float = 1.2
+    burn_windows: tuple = ((8, 2, 1.5), (32, 8, 1.2))
     events_path: Optional[str] = None
     profiler_annotations: bool = False
     trace_ingest: bool = True
@@ -122,7 +138,7 @@ class Observability:
 def __getattr__(name: str):
     # residuals/metrics import repro.core/jax laws — lazy so importing
     # repro.obs.jits from the planner stack cannot cycle back through it
-    if name in ("residuals", "metrics"):
+    if name in ("residuals", "metrics", "costs", "http"):
         import importlib
         return importlib.import_module(f"{__name__}.{name}")
     raise AttributeError(name)

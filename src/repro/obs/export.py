@@ -5,16 +5,53 @@
 leaves become ``<prefix>_<path> value`` samples, lists of numbers become
 one sample per element with an ``idx`` label (per-tier gauges), and
 non-numeric leaves are dropped. Names are sanitized to the metric
-charset. The output is deterministic (sorted) so snapshots diff cleanly
-in CI artifacts.
+charset. Leaves whose terminal path component names a monotone
+transaction count are typed ``counter`` (scrapers can rate() them);
+everything else stays a ``gauge``, and known metrics carry ``# HELP``
+text. The output is deterministic (sorted) so snapshots diff cleanly in
+CI artifacts.
 """
 from __future__ import annotations
 
 import json
 import re
-from typing import Iterable, List, Tuple
+from typing import Iterable, List, Optional, Tuple
 
 _NAME_RE = re.compile(r"[^a-zA-Z0-9_]")
+
+# terminal path components that only ever accumulate (device/meter
+# transaction counts, event totals): exposed as Prometheus counters
+_COUNTER_LEAVES = frozenset({
+    "docs", "admits", "evictions", "bar_candidates", "bar_passes",
+    "chunks", "drift_fired", "observed", "writes", "reads", "deletes",
+    "migrations", "relocations", "resident_steps", "recorded", "dropped",
+    "checks", "steps", "hits", "misses", "compiles",
+})
+
+# HELP text per terminal path component (kept to the metrics whose
+# meaning is not obvious from the name alone)
+_HELP = {
+    "docs": "documents ingested (padding excluded)",
+    "admits": "reservoir admissions (the SHP write law's realization)",
+    "evictions": "reservoir evictions",
+    "bar_candidates": "candidates tested against the entry bar",
+    "bar_passes": "candidates that cleared the entry bar",
+    "chunks": "jitted fleet steps executed",
+    "drift_fired": "drift-detector firings folded into the device state",
+    "observed": "documents observed by the host meter",
+    "writes": "tier write transactions",
+    "reads": "tier read transactions (final top-K)",
+    "deletes": "tier delete transactions",
+    "migrations": "documents cascaded across a boundary",
+    "relocations": "residents re-tiered by online re-plans",
+    "resident_steps": "doc-step storage rental integral (obs.costs)",
+    "planned_total": "closed-form expected spend at the current position",
+    "regret": "realized minus planned spend",
+    "max_burn_ratio": "worst realized/planned spend over the long burn "
+                      "window",
+    "recorded": "events captured on the obs timeline",
+    "dropped": "events dropped past max_events",
+}
 
 
 def _clean(name: str) -> str:
@@ -36,6 +73,15 @@ def _flatten(snap, path: Tuple[str, ...] = ()) -> Iterable[Tuple]:
                 yield path, i, float(v)
 
 
+def _leaf_kind(path: Tuple[str, ...]) -> Tuple[str, Optional[str]]:
+    """(type, help) for a flattened path, keyed by its terminal
+    component (the leaf name is the semantic unit; the prefix is just
+    the engine/section nesting)."""
+    leaf = path[-1] if path else ""
+    kind = "counter" if leaf in _COUNTER_LEAVES else "gauge"
+    return kind, _HELP.get(leaf)
+
+
 def to_prometheus(snap: dict, prefix: str = "repro_obs") -> str:
     """Render a snapshot dict as Prometheus text exposition."""
     lines: List[str] = []
@@ -44,7 +90,10 @@ def to_prometheus(snap: dict, prefix: str = "repro_obs") -> str:
         name = _clean("_".join((prefix,) + path))
         if name not in seen_names:
             seen_names.add(name)
-            lines.append(f"# TYPE {name} gauge")
+            kind, help_text = _leaf_kind(path)
+            if help_text is not None:
+                lines.append(f"# HELP {name} {help_text}")
+            lines.append(f"# TYPE {name} {kind}")
         label = f'{{idx="{idx}"}}' if idx is not None else ""
         sval = f"{val:.10g}" if val == val else "NaN"
         lines.append(f"{name}{label} {sval}")

@@ -144,7 +144,8 @@ def evicted_ids(old: BatchedReservoirState,
 def _make_step(use_kernel_filter: bool, block_n: int, drift_cfg=None,
                bucket_ks: Tuple[int, ...] = (), update_path: str = "auto",
                with_metrics: bool = False, mesh=None, donate: bool = False,
-               bucket_engines: Tuple[str, ...] = ()):
+               bucket_engines: Tuple[str, ...] = (),
+               with_costs: bool = False):
     """One jitted step over ALL buckets: states/batches are same-length
     tuples (the pytree structure is static, so the whole fleet advances in
     a single XLA computation). With ``drift_cfg`` (online re-planning) the
@@ -175,6 +176,13 @@ def _make_step(use_kernel_filter: bool, block_n: int, drift_cfg=None,
     program; when off, ``mstate`` is an empty tuple and the traced
     computation is exactly the pre-obs step (bit-identical outputs).
 
+    With ``with_costs`` (obs.costs) the step also folds each bucket's
+    device ``CostState`` ledger — integer per-(stream, tier) write /
+    delete / doc-step counts against the stream's boundary vector,
+    priced on host only at drain. Same discipline as the metrics state:
+    fused reductions over values the step already materializes, and
+    ``cstates = ()`` when off leaves the traced computation unchanged.
+
     With ``mesh`` (a ``parallel.fleet`` mesh) the whole step is
     ``shard_map``-ped over the fleet axis: every leading-M leaf —
     reservoir state, batch, drift state — splits across devices and each
@@ -191,15 +199,18 @@ def _make_step(use_kernel_filter: bool, block_n: int, drift_cfg=None,
         from repro.online import drift as drift_mod
     if with_metrics:
         from repro.obs import metrics as metrics_mod
+    if with_costs:
+        from repro.obs import costs as costs_mod
     if update_path not in ("auto", "fused"):
         raise ValueError(f"unknown update_path {update_path!r}")
 
-    def step(states, batches, dstates, mstate):
+    def step(states, batches, dstates, mstate, cstates):
         if with_metrics and mesh is not None:
             # inside shard_map: squeeze this shard's (1, 7) counter
             # block to the flat layout the accumulate laws expect
             mstate = metrics_mod.shard_local(mstate)
         new_states, wrotes, evs, new_dstates = [], [], [], []
+        new_cstates = []
         for bi, (st, (s, i)) in enumerate(zip(states, batches)):
             if bucket_engines and bucket_engines[bi] == "logmem":
                 new, wrote = logmem.update(st, s, i, int(bucket_ks[bi]),
@@ -210,6 +221,9 @@ def _make_step(use_kernel_filter: bool, block_n: int, drift_cfg=None,
                 ev = jnp.full((s.shape[0], 0), PAD_ID, jnp.int32)
                 bar = st.tau
                 slack = logmem.law_slack(bucket_ks[bi])
+                if with_costs:
+                    new_cstates.append(costs_mod.accumulate_logmem(
+                        cstates[bi], i, wrote))
             else:
                 wide = s.shape[1] >= st.scores.shape[1]
                 if wide and (update_path == "auto" or use_kernel_filter):
@@ -220,6 +234,9 @@ def _make_step(use_kernel_filter: bool, block_n: int, drift_cfg=None,
                 ev = evicted_ids(st, new)
                 bar = st.scores[:, -1]
                 slack = 0.0
+                if with_costs:
+                    new_cstates.append(costs_mod.accumulate_exact(
+                        cstates[bi], i, wrote, ev, new.ids))
             new_states.append(new)
             wrotes.append(wrote)
             evs.append(ev)
@@ -248,16 +265,16 @@ def _make_step(use_kernel_filter: bool, block_n: int, drift_cfg=None,
         if with_metrics and mesh is not None:
             mstate = metrics_mod.shard_pack(mstate)
         return tuple(new_states), tuple(wrotes), tuple(evs), \
-            tuple(new_dstates), mstate
+            tuple(new_dstates), mstate, tuple(new_cstates)
 
     if mesh is not None:
         from repro.parallel import fleet
         spec = fleet.row_spec()
         step = fleet.shard_map(step, mesh=mesh,
-                               in_specs=(spec, spec, spec, spec),
-                               out_specs=(spec, spec, spec, spec, spec),
+                               in_specs=(spec,) * 5,
+                               out_specs=(spec,) * 6,
                                check_rep=False)
-    return jax.jit(step, donate_argnums=(0, 2, 3) if donate else ())
+    return jax.jit(step, donate_argnums=(0, 2, 3, 4) if donate else ())
 
 
 # ---------------------------------------------------------------------------
@@ -499,6 +516,36 @@ class StreamEngine:
                     self.meter.ks, alpha=obs.config.residual_alpha,
                     max_checks=obs.config.residual_max_checks,
                     law_slack=slack_rows)
+        # live cost attribution (obs.costs): device CostState ledger in
+        # the step, host CostMonitor (cost residuals + budget burn rate)
+        # off the meter drain
+        self._cost_states = None
+        self._cost_monitor = None
+        self._pricing = None
+        if obs is not None and obs.config.costs:
+            from repro.obs import costs as costs_mod
+            self._cost_states = [
+                costs_mod.init_bucket(pm,
+                                      self.meter.boundaries[rows],
+                                      self.meter.n_tiers)
+                for pm, rows in zip(self._pad_m, self._global_rows)]
+            if mesh is not None:
+                from repro.parallel import fleet
+                self._cost_states = [fleet.shard_rows(mesh, cs)
+                                     for cs in self._cost_states]
+            self._pricing = costs_mod.stream_pricing(self)
+            slack_rows = np.where(
+                self.meter.logmem,
+                np.array([logmem.law_slack(int(k))
+                          for k in self.meter.ks]), 0.0)
+            self._cost_monitor = costs_mod.CostMonitor(
+                self.meter.ks, self.meter.boundaries,
+                self._pricing["cw"], self._pricing["step_rate"],
+                alpha=obs.config.cost_alpha,
+                max_checks=obs.config.cost_max_checks,
+                law_slack=slack_rows, logmem=self.meter.logmem,
+                budget_factor=obs.config.budget_factor,
+                burn_windows=obs.config.burn_windows)
         self._step_factory = lambda donate: _make_step(
             use_kernel_filter, block_n,
             drift_cfg=None if replan is None else replan.drift,
@@ -506,7 +553,8 @@ class StreamEngine:
             update_path=update_path,
             with_metrics=self._metrics_state is not None,
             mesh=mesh, donate=donate,
-            bucket_engines=tuple(b.engine for b in self.buckets))
+            bucket_engines=tuple(b.engine for b in self.buckets),
+            with_costs=self._cost_states is not None)
         self._step = self._step_factory(False)
         self._donating_step = None  # built lazily by ingest_chunks
 
@@ -564,19 +612,23 @@ class StreamEngine:
                    if self._drift_states is not None else ())
         mstate = (self._metrics_state
                   if self._metrics_state is not None else ())
+        cstates = (tuple(self._cost_states)
+                   if self._cost_states is not None else ())
         if donate:
             if self._donating_step is None:
                 self._donating_step = self._step_factory(True)
             step = self._donating_step
         else:
             step = self._step
-        new_states, wrotes, evs, new_dstates, mstate = step(
-            tuple(self._states), batches, dstates, mstate)
+        new_states, wrotes, evs, new_dstates, mstate, new_cstates = step(
+            tuple(self._states), batches, dstates, mstate, cstates)
         self._states = list(new_states)
         if self._metrics_state is not None:
             self._metrics_state = mstate
         if self._drift_states is not None:
             self._drift_states = list(new_dstates)
+        if self._cost_states is not None:
+            self._cost_states = list(new_cstates)
         return wrotes, evs, new_states
 
     def _consume(self, dense, wrotes, evs, new_states,
@@ -614,8 +666,42 @@ class StreamEngine:
                     and self._drift_states is not None):
                 residual_rows = tuple(
                     int(r) for r in np.flatnonzero(self._residuals.alerted))
+        cost_rows = ()
+        if meter and self._cost_monitor is not None:
+            # the cost channel runs off the same meter drain: realized
+            # spend vs the closed-form expected-cost trajectory
+            newly_cost, newly_burn = self._cost_monitor.update(
+                self.meter.observed, self.meter.writes,
+                self.meter.doc_steps)
+            if self._tracer is not None and newly_cost.any():
+                sc = self._cost_monitor.scores()
+                for row in np.flatnonzero(newly_cost):
+                    self._tracer.emit(
+                        "cost_alert", stream_id=self._sid_of_row[row],
+                        row=int(row),
+                        position=int(self.meter.observed[row]),
+                        score=float(sc[row]),
+                        step=int(self._cost_monitor.steps))
+            if self._tracer is not None and newly_burn.any():
+                br = self._cost_monitor.burn_ratio()
+                for row in np.flatnonzero(newly_burn):
+                    self._tracer.emit(
+                        "budget_burn", stream_id=self._sid_of_row[row],
+                        row=int(row),
+                        position=int(self.meter.observed[row]),
+                        burn_ratio=float(br[row]),
+                        realized=float(
+                            self._cost_monitor.realized_total[row]),
+                        planned=float(
+                            self._cost_monitor.planned_total[row]),
+                        step=int(self._cost_monitor.steps))
+            if (self._obs.config.cost_trigger
+                    and self._drift_states is not None):
+                cost_rows = tuple(int(r) for r in np.flatnonzero(
+                    self._cost_monitor.alerted
+                    | self._cost_monitor.burn_alerted))
         if meter and self._drift_states is not None:
-            self._maybe_replan(residual_rows)
+            self._maybe_replan(residual_rows, cost_rows)
 
     def _run_chunk(self, dense, *, meter: bool = True,
                    donate: bool = False) -> None:
@@ -670,17 +756,20 @@ class StreamEngine:
             count += 1
         return count
 
-    def _maybe_replan(self, residual_rows: Sequence[int] = ()) -> None:
+    def _maybe_replan(self, residual_rows: Sequence[int] = (),
+                      cost_rows: Sequence[int] = ()) -> None:
         """Between chunks: re-plan the streams whose drift detector fired
         — unioned with the obs residual-alert channel when it is
         configured as an earlier trigger (``ObsConfig.residual_trigger``)
-        — apply the boundary deltas to the meter (re-tiering residents,
-        with the relocation bill already priced into the decision), and
-        reset the consumed detector (and residual) evidence."""
+        and with the cost/budget-burn channel under
+        ``ObsConfig.cost_trigger`` — apply the boundary deltas to the
+        meter (re-tiering residents, with the relocation bill already
+        priced into the decision), and reset the consumed detector (and
+        residual/cost) evidence."""
         from repro.online import drift as drift_mod
         fired_rows, rhos = [], []
         bucket_of, row_in_bucket = [], []
-        extra = set(residual_rows)
+        extra = set(residual_rows) | set(cost_rows)
         for bi in range(len(self.buckets)):
             ds = self._drift_states[bi]
             fired = np.asarray(ds.fired)[:self.buckets[bi].m]
@@ -732,6 +821,15 @@ class StreamEngine:
                 moved = self.meter.apply_boundaries(
                     int(row), dec.new_bounds[j], ids_arg)
                 touched_buckets.add(bi)
+                if self._cost_states is not None:
+                    # swap the device ledger's boundary row (a scatter —
+                    # no recompile) and the monitor's planned trajectory
+                    from repro.obs import costs as costs_mod
+                    self._cost_states[bi] = costs_mod.set_bucket_bounds(
+                        self._cost_states[bi], jb,
+                        self.meter.boundaries[int(row)])
+                    self._cost_monitor.set_bounds(
+                        int(row), self.meter.boundaries[int(row)])
             self.replan_events.append(ReplanEvent(
                 stream_id=self._sid_of_row[int(row)], row=int(row),
                 position=int(dec.n_seen[j]), rho=float(dec.rho[j]),
@@ -746,7 +844,8 @@ class StreamEngine:
                     row=int(row), position=int(dec.n_seen[j]),
                     rho=float(dec.rho[j]), applied=bool(dec.applied[j]),
                     feasible=bool(dec.feasible[j]), moved_docs=moved,
-                    residual_triggered=int(row) in set(residual_rows))
+                    residual_triggered=int(row) in set(residual_rows),
+                    cost_triggered=int(row) in set(cost_rows))
         # boundary deltas are placement metadata: the reservoirs themselves
         # must be untouched — every affected bucket keeps the sorted-desc
         # score invariant the merge relies on
@@ -769,12 +868,22 @@ class StreamEngine:
                 from repro.parallel import fleet
                 self._drift_states[bi] = fleet.shard_rows(
                     self.mesh, self._drift_states[bi])
+        if self._cost_states is not None and self.mesh is not None:
+            # the eager bounds scatter may have gathered — re-pin
+            from repro.parallel import fleet
+            for bi in touched_buckets:
+                self._cost_states[bi] = fleet.shard_rows(
+                    self.mesh, self._cost_states[bi])
         if self._residuals is not None:
             # the re-plan consumed this evidence — restart the residual
             # channel for the processed rows, like the detector
             rmask = np.zeros(self.m, bool)
             rmask[rows] = True
             self._residuals.reset_where(rmask)
+        if self._cost_monitor is not None:
+            cmask = np.zeros(self.m, bool)
+            cmask[rows] = True
+            self._cost_monitor.reset_where(cmask)
 
     def _negotiate_admission(self, row: int, position: int) -> None:
         """A constrained suffix re-solve found no feasible plan (or the
@@ -899,6 +1008,38 @@ class StreamEngine:
         }
         if self._residuals is not None:
             out["residuals"]["alerts"] = self._residuals.snapshot()
+        if self._cost_states is not None:
+            from repro.obs import costs as costs_mod
+            out["costs"] = costs_mod.snapshot(self)
+        return out
+
+    def cost_summary(self) -> Dict:
+        """Per-stream realized / planned / regret cost arrays from the
+        device ledger + host monitor (``obs.costs.cost_summary``)."""
+        if self._cost_states is None:
+            raise ValueError("engine built without obs= (or costs off)")
+        from repro.obs import costs as costs_mod
+        return costs_mod.cost_summary(self)
+
+    def cost_alerts(self) -> Dict[int, Dict]:
+        """{stream_id: {"position", "kind"}} of the cost channel's first
+        alert per stream — ``kind`` is "residual" or "burn" (whichever
+        fired first; streams that never alerted are absent)."""
+        if self._cost_monitor is None:
+            raise ValueError("engine built without obs= (or costs off)")
+        mon = self._cost_monitor
+        out: Dict[int, Dict] = {}
+        for row in range(self.m):
+            res_at = int(mon.first_alert_seen[row])
+            burn_at = int(mon.first_burn_seen[row])
+            if res_at < 0 and burn_at < 0:
+                continue
+            if burn_at < 0 or (0 <= res_at <= burn_at):
+                out[self._sid_of_row[row]] = {"position": res_at,
+                                              "kind": "residual"}
+            else:
+                out[self._sid_of_row[row]] = {"position": burn_at,
+                                              "kind": "burn"}
         return out
 
     def _record_final_reads(self) -> None:

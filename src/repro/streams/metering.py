@@ -85,6 +85,17 @@ class FleetMeter:
         self.deletes = np.zeros((m, self.n_tiers), np.int64)
         self.migrations = np.zeros(m, np.int64)
         self.relocations = np.zeros(m, np.int64)  # docs re-tiered by re-plans
+        # per-tier hop accounting for cost attribution: a cascade or
+        # re-plan move bills one read at the source tier and one write at
+        # the destination (the simulator's ``_move_doc`` convention)
+        self.mig_reads = np.zeros((m, self.n_tiers), np.int64)
+        self.mig_writes = np.zeros((m, self.n_tiers), np.int64)
+        self.reloc_reads = np.zeros((m, self.n_tiers), np.int64)
+        self.reloc_writes = np.zeros((m, self.n_tiers), np.int64)
+        # the storage rental integral: Σ_steps occupancy × docs ingested
+        # that step — at chunk width 1 this equals the simulator's
+        # per-doc doc-month accounting exactly (priced by obs.costs)
+        self.doc_steps = np.zeros((m, self.n_tiers), np.int64)
         # current residents per tier and the running high-water mark,
         # sampled after each recorded step (exact vs the simulator at W=1)
         self.occupancy = np.zeros((m, self.n_tiers), np.int64)
@@ -155,6 +166,10 @@ class FleetMeter:
             np.add.at(self.occupancy, (rows2[ev_mask], ev_tiers[ev_mask]), -1)
         if state_ids is not None:
             self._maybe_migrate(stream_rows, np.asarray(state_ids))
+        # accrue the rental integral after the step's moves settled
+        self.doc_steps[stream_rows] += (
+            self.occupancy[stream_rows]
+            * (doc_ids >= 0).sum(1).astype(np.int64)[:, None])
         self.occupancy_hwm[stream_rows] = np.maximum(
             self.occupancy_hwm[stream_rows], self.occupancy[stream_rows])
 
@@ -178,6 +193,12 @@ class FleetMeter:
             self.floor[rows][:, None])
         resident = (ids >= 0) & (tiers < target[firing][:, None])
         np.add.at(self.migrations, rows, resident.sum(1))
+        # hop billing: read each resident out of its source tier, write
+        # it into the target (``SimResult.mig_reads/mig_writes``)
+        rows2 = np.broadcast_to(rows[:, None], tiers.shape)
+        np.add.at(self.mig_reads, (rows2[resident], tiers[resident]), 1)
+        np.add.at(self.mig_writes, (rows, target[firing]),
+                  resident.sum(1))
         # occupancy: every resident below the target hops into it
         occ = self.occupancy[rows]
         tgt = target[firing]
@@ -229,8 +250,11 @@ class FleetMeter:
         self.boundaries[row, :] = np.inf
         self.boundaries[row, : len(bs)] = bs
         new_tiers = (ids[:, None] >= self.boundaries[row][None, :]).sum(1)
-        moved = int(np.sum(new_tiers != old_tiers))
+        hop = new_tiers != old_tiers
+        moved = int(np.sum(hop))
         self.relocations[row] += moved
+        np.add.at(self.reloc_reads[row], old_tiers[hop], 1)
+        np.add.at(self.reloc_writes[row], new_tiers[hop], 1)
         occ = np.bincount(new_tiers, minlength=self.n_tiers)
         self.occupancy[row] = occ[: self.n_tiers]
         self.occupancy_hwm[row] = np.maximum(self.occupancy_hwm[row],

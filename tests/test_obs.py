@@ -319,10 +319,22 @@ def test_prometheus_exposition_format():
             "skip": "strings are not exported"}
     text = export.to_prometheus(snap, prefix="t")
     lines = text.splitlines()
-    assert "# TYPE t_engines_engine0_engine_docs gauge" in lines
+    # monotone transaction counts expose as counters with HELP text;
+    # everything else stays a gauge
+    assert "# TYPE t_engines_engine0_engine_docs counter" in lines
+    assert "# HELP t_engines_engine0_engine_docs " \
+        "documents ingested (padding excluded)" in lines
+    assert "# TYPE t_engines_engine0_engine_rate gauge" in lines
     assert "t_engines_engine0_engine_docs 12" in lines
     assert 't_engines_engine0_tiers{idx="0"} 3' in lines
     assert not any("skip" in ln for ln in lines)
+    # HELP precedes TYPE for every annotated metric, and the format is
+    # deterministic (a second render is byte-identical)
+    for i, ln in enumerate(lines):
+        if ln.startswith("# TYPE") and i > 0 and \
+                lines[i - 1].startswith("# HELP"):
+            assert lines[i - 1].split()[2] == ln.split()[2]
+    assert export.to_prometheus(snap, prefix="t") == text
 
 
 def test_timers_disciplines():

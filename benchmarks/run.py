@@ -40,6 +40,13 @@ SHARD_FLOOR_FULL = 2.0
 _COSTOBS_RE = re.compile(r"^streams\.engine_step_costobs_(?P<size>.+)$")
 COSTOBS_TOLERANCE = 0.05
 
+# chunk-boundary checkpointing ceiling: each ``engine_step_ckpt_*`` row
+# is paired with its SAME-RUN ``engine_step_ckptoff_*`` twin (identical
+# fleet, chunks, interleaved rounds — the delta is the snapshot + async
+# npy handoff alone, tail wait included) and must stay within 10% of it
+_CKPT_RE = re.compile(r"^streams\.engine_step_ckpt_(?P<size>.+)$")
+CKPT_TOLERANCE = 0.10
+
 # engine-backend memory floor: each ``<base>.logmem`` row is paired with
 # its SAME-RUN ``<base>.exact`` row by the ``bytes_per_stream`` extras —
 # device bytes are deterministic, so the floor has no tolerance band.
@@ -205,6 +212,30 @@ def check_regressions(fresh: dict, baseline_dir: str = ".",
                 if entry["status"] == "costobs_slow":
                     regressions.append(entry)
             diff.append(entry)
+        # checkpointing rows: same-run pairing against the no-checkpoint
+        # twin — the chunk-boundary snapshot + async write handoff must
+        # stay within CKPT_TOLERANCE of the bare ingest loop
+        for row in rows:
+            match = _CKPT_RE.match(row["name"])
+            if match is None:
+                continue
+            entry = {"name": row["name"], "us_new": row["us_per_call"],
+                     "guarded": True, "tol": CKPT_TOLERANCE}
+            ref = by_name.get(
+                f"streams.engine_step_ckptoff_{match.group('size')}")
+            if ref is None or not ref["us_per_call"]:
+                entry["status"] = "missing_ckptoff_ref"
+                regressions.append(entry)
+            else:
+                overhead = row["us_per_call"] / ref["us_per_call"] - 1.0
+                entry["us_ckptoff"] = ref["us_per_call"]
+                entry["overhead"] = overhead
+                entry["status"] = ("ckpt_slow"
+                                   if overhead > CKPT_TOLERANCE
+                                   else "ok")
+                if entry["status"] == "ckpt_slow":
+                    regressions.append(entry)
+            diff.append(entry)
         # engine-backend rows: same-run memory pairing — a logmem row
         # whose exact twin is missing (or whose bytes advantage drops
         # under the floor) fails the run
@@ -255,6 +286,15 @@ def check_regressions(fresh: dict, baseline_dir: str = ".",
                   f"{entry['overhead']:+.1%} over the same-run obs twin "
                   f"({entry['us_new']:.1f}us vs {entry['us_obs']:.1f}us), "
                   f"ceiling {entry['tol']:.0%}")
+        elif entry["status"] == "missing_ckptoff_ref":
+            print(f"  MISSING same-run engine_step_ckptoff twin for "
+                  f"{entry['name']}")
+        elif entry["status"] == "ckpt_slow":
+            print(f"  CKPT-SLOW {entry['name']}: "
+                  f"{entry['overhead']:+.1%} over the same-run "
+                  f"no-checkpoint twin ({entry['us_new']:.1f}us vs "
+                  f"{entry['us_ckptoff']:.1f}us), ceiling "
+                  f"{entry['tol']:.0%}")
         elif entry["status"] == "missing_pair":
             print(f"  MISSING same-run .exact memory pair for "
                   f"{entry['name']}")

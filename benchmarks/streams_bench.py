@@ -153,6 +153,67 @@ def _logmem_ratio_rows(emit, rng):
              admit_ratio=float(np.mean(rep["admit_ratio"])), k=k)
 
 
+# checkpoint-overhead pair: (M, W, save cadence, chunks-per-round,
+# rounds) — the README's cadence guidance regime: wide chunks (the
+# fleet-scale ingest shape) and a save every 8 chunks, so the async npy
+# write hides behind ~8 chunks of compute and the residual per-chunk
+# cost is the synchronous host snapshot plus the final drain's tail,
+# amortized over the round
+CKPT_SWEEP = ((256, 1024, 8, 16, 5),)
+
+
+def _ckpt_rows(emit, rng):
+    """Chunk-boundary checkpointing overhead: the same double-buffered
+    ``ingest_chunks`` loop with a ``FleetCheckpointer`` saving every
+    chunk (async npy writes on the manager's worker thread) vs an
+    identical no-checkpoint twin. Emitted as a same-run pair
+    (``engine_step_ckpt_*`` / ``engine_step_ckptoff_*``, interleaved
+    rounds, min-of-rounds) so ``run.py --check`` holds the snapshot +
+    handoff cost within its ceiling without cross-machine assumptions.
+    The timed region includes the final ``wait()`` — the tail I/O is
+    part of the overhead, not free."""
+    import shutil
+    import tempfile
+
+    from repro.resilience import FleetCheckpointer
+    for m, w, every, n_chunks, rounds in CKPT_SWEEP:
+        sc = rng.standard_normal((m, w)).astype(np.float32)
+        ids = np.tile(np.arange(w, dtype=np.int32), (m, 1))
+        chunk = [(sc, ids)]
+        specs = [engine.StreamSpec(stream_id=i, k=K, r=float(4 * K))
+                 for i in range(m)]
+        tmp = tempfile.mkdtemp(prefix="bench_ckpt_")
+        try:
+            eng_off = engine.StreamEngine(specs)
+            eng_on = engine.StreamEngine(specs)
+            ck = FleetCheckpointer(tmp, every=every, keep_latest=2)
+            eng_on.attach_checkpointer(ck)
+            for eng in (eng_off, eng_on):  # warm the jitted step
+                eng.ingest_dense(chunk)
+            ck.save(eng_on, blocking=True)  # warm the save path too
+            ck.wait()
+            variants = [("_ckptoff", eng_off, None),
+                        ("_ckpt", eng_on, ck)]
+            best = {name: float("inf") for name, _, _ in variants}
+            for _ in range(rounds):
+                for name, eng, cw in variants:
+                    t0 = time.perf_counter()
+                    eng.ingest_chunks(chunk for _ in range(n_chunks))
+                    if cw is not None:
+                        cw.wait()
+                    us = (time.perf_counter() - t0) * 1e6 / n_chunks
+                    best[name] = min(best[name], us)
+            for name, _, _ in variants:
+                us = best[name]
+                what = (f"per-chunk ingest + async checkpoint "
+                        f"(every {every} chunks)" if name == "_ckpt"
+                        else "per-chunk ingest, checkpointing off")
+                emit(f"streams.engine_step{name}_m{m}_k{K}_w{w}", us,
+                     f"{m * w / us * 1e6:.0f} docs/s {what}")
+        finally:
+            shutil.rmtree(tmp, ignore_errors=True)
+
+
 def _sharded_step_rows(emit, rng):
     """Fleet-axis scaling: the same jitted engine step, single-device vs
     shard_map-ped over the mesh, on identical inputs — emitted as a
@@ -250,6 +311,7 @@ def run(emit):
              f"(M-batched {BATCH}-doc chunk stats)")
     _backend_rows(emit, rng)
     _logmem_ratio_rows(emit, rng)
+    _ckpt_rows(emit, rng)
     _sharded_step_rows(emit, rng)
 
 

@@ -23,6 +23,7 @@ Run: PYTHONPATH=src python examples/serve_topk.py [--requests 64]
 """
 import argparse
 import os
+import signal
 import sys
 import time
 
@@ -112,6 +113,15 @@ def main():
                     help="shard the tenant fleet across an N-device CPU "
                          "mesh (forced via XLA_FLAGS before jax loads); "
                          "requires --tenants > 1")
+    ap.add_argument("--ckpt-dir", default=None, metavar="DIR",
+                    help="crash-consistent fleet checkpointing "
+                         "(repro.resilience; requires --tenants > 1): "
+                         "write chunk-boundary checkpoints to DIR, plus a "
+                         "final blocking checkpoint on exit and on "
+                         "SIGTERM/SIGINT")
+    ap.add_argument("--ckpt-every", type=int, default=4, metavar="N",
+                    help="checkpoint every N ingested chunks (0 = final "
+                         "checkpoint only)")
     args = ap.parse_args()
 
     mesh = None
@@ -159,6 +169,28 @@ def main():
                                dtype=jnp.int32), tiers.ColdTier())
         curator = TopKCurator(args.topk, store, policy=pol)
 
+    checkpointer = None
+    if args.ckpt_dir is not None:
+        if engine is None:
+            raise SystemExit("--ckpt-dir requires --tenants > 1")
+        from repro.resilience import FleetCheckpointer
+        checkpointer = FleetCheckpointer(args.ckpt_dir,
+                                         every=args.ckpt_every)
+        engine.attach_checkpointer(checkpointer)
+        print(f"checkpointing to {args.ckpt_dir} "
+              f"(every {args.ckpt_every} chunks)")
+
+    # Graceful shutdown: SIGTERM/SIGINT only request a stop — the loop
+    # finishes its in-flight batch, then the normal teardown runs (final
+    # blocking checkpoint, obs artifacts, endpoint drain).
+    stop = {"signal": None}
+
+    def _request_stop(signum, frame):
+        stop["signal"] = signum
+
+    for s in (signal.SIGTERM, signal.SIGINT):
+        signal.signal(s, _request_stop)
+
     prefill = jax.jit(lambda p, b, c: lm.prefill(p, cfg, b, c))
     step = jax.jit(lambda p, t, c: lm.decode_step(p, cfg, t, c))
     rng = np.random.default_rng(0)
@@ -166,7 +198,7 @@ def main():
     served = 0
     n_batches = -(-args.requests // args.batch)
     t0 = time.time()
-    while served < args.requests:
+    while served < args.requests and stop["signal"] is None:
         b = min(args.batch, args.requests - served)
         prompts = rng.integers(0, cfg.vocab_size, (b, args.prompt_len))
         cache = lm.init_cache(cfg, b, args.prompt_len + args.gen_len + 1)
@@ -194,8 +226,15 @@ def main():
             time.sleep(args.obs_hold / n_batches)
     dt = time.time() - t0
 
+    if stop["signal"] is not None:
+        print(f"graceful shutdown on {signal.Signals(stop['signal']).name}: "
+              f"served {served}/{args.requests} requests", flush=True)
     print(f"served {served} requests in {dt:.1f}s "
           f"({served * (args.prompt_len + args.gen_len) / dt:.0f} tok/s)")
+    if checkpointer is not None:
+        gen = checkpointer.save(engine, blocking=True)
+        print(f"final checkpoint: generation {gen} at chunk "
+              f"{engine.chunks_ingested} -> {args.ckpt_dir}", flush=True)
     if engine is not None:
         survivors = engine.finalize()
         rec = engine.meter.reconcile(batch=max(1, args.batch // args.tenants))

@@ -10,9 +10,15 @@
   SHP policy over checkpoint index.
 * Topology-independent: leaves are full (unsharded) arrays, so a restart
   may use a different mesh or dp size.
+* Crash-consistent (format v2): every leaf carries a sha256 checksum in
+  the manifest, verified on restore, and every save stamps a monotone
+  *generation* counter that survives restarts — a resumed run keeps
+  incrementing where the killed run stopped, so checkpoint lineage is
+  totally ordered even across crash/restore cycles.
 """
 from __future__ import annotations
 
+import hashlib
 import heapq
 import json
 import os
@@ -21,17 +27,31 @@ import threading
 import time
 from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass
-from typing import Any, Optional
+from typing import Any, Dict, Optional
 
 import jax
 import numpy as np
 
 from repro.core.placement import Policy, TIER_A
 
+FORMAT_VERSION = 2
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A stored leaf fails its manifest checksum."""
+
 
 def _flatten(tree):
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     return leaves, treedef
+
+
+def _file_sha256(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for block in iter(lambda: f.read(1 << 20), b""):
+            h.update(block)
+    return h.hexdigest()
 
 
 class CheckpointManager:
@@ -49,6 +69,10 @@ class CheckpointManager:
         self._pool = ThreadPoolExecutor(max_workers=1)
         self._pending: Optional[Future] = None
         self._save_index = 0
+        # resume the generation lineage of whatever already lives on disk
+        ckpts = self._all_ckpts()
+        self._generation = max(
+            (m.get("generation", 0) for m, _ in ckpts), default=0)
 
     # ---------------- paths ----------------
     def _name(self, step: int) -> str:
@@ -77,12 +101,20 @@ class CheckpointManager:
 
     # ---------------- save ----------------
     def save(self, state: Any, step: int, metric: float = float("nan"),
-             blocking: bool = False) -> None:
+             blocking: bool = False,
+             extra: Optional[Dict[str, Any]] = None) -> int:
+        """Snapshot ``state`` at ``step``; returns the generation stamped
+        on the checkpoint. ``extra`` (JSON-able dict) rides in the
+        manifest — host-side scalars/events that are not pytree leaves.
+        Non-blocking saves copy to host here and write on the worker
+        thread, so compute on the next chunk overlaps the I/O."""
         self.wait()
         leaves, treedef = _flatten(state)
         host_leaves = [np.asarray(jax.device_get(l)) for l in leaves]
         idx = self._save_index
         self._save_index += 1
+        self._generation += 1
+        gen = self._generation
 
         def _write():
             target_root = self._tier_dir(idx)
@@ -91,11 +123,18 @@ class CheckpointManager:
             if os.path.exists(tmp):
                 shutil.rmtree(tmp)
             os.makedirs(tmp)
+            checksums = []
             for i, leaf in enumerate(host_leaves):
-                np.save(os.path.join(tmp, f"leaf_{i:05d}.npy"), leaf)
-            manifest = {"step": step, "metric": float(metric),
+                p = os.path.join(tmp, f"leaf_{i:05d}.npy")
+                np.save(p, leaf)
+                checksums.append(_file_sha256(p))
+            manifest = {"format": FORMAT_VERSION, "step": step,
+                        "metric": float(metric),
                         "n_leaves": len(host_leaves), "save_index": idx,
+                        "generation": gen, "checksums": checksums,
                         "time": time.time()}
+            if extra is not None:
+                manifest["extra"] = extra
             with open(os.path.join(tmp, "manifest.json"), "w") as f:
                 json.dump(manifest, f)
             if os.path.exists(final):
@@ -107,6 +146,7 @@ class CheckpointManager:
             _write()
         else:
             self._pending = self._pool.submit(_write)
+        return gen
 
     def wait(self):
         if self._pending is not None:
@@ -132,21 +172,44 @@ class CheckpointManager:
         ckpts = self._all_ckpts()
         return ckpts[-1][0]["step"] if ckpts else None
 
-    def restore(self, template: Any, step: Optional[int] = None) -> Any:
+    def generation(self) -> int:
+        """Generation stamped on the most recent save (0 = none yet)."""
+        return self._generation
+
+    def _lookup(self, step: Optional[int]):
         ckpts = self._all_ckpts()
         if not ckpts:
             raise FileNotFoundError(f"no checkpoints under {self.dir}")
         if step is None:
-            manifest, path = ckpts[-1]
-        else:
-            match = [(m, p) for m, p in ckpts if m["step"] == step]
-            if not match:
-                raise FileNotFoundError(f"no checkpoint for step {step}")
-            manifest, path = match[0]
+            return ckpts[-1]
+        match = [(m, p) for m, p in ckpts if m["step"] == step]
+        if not match:
+            raise FileNotFoundError(f"no checkpoint for step {step}")
+        return match[0]
+
+    def manifest(self, step: Optional[int] = None) -> Dict[str, Any]:
+        """The manifest dict of a stored checkpoint (latest by default)."""
+        return self._lookup(step)[0]
+
+    def restore(self, template: Any, step: Optional[int] = None,
+                verify: bool = True) -> Any:
+        manifest, path = self._lookup(step)
         leaves, treedef = _flatten(template)
+        if manifest.get("n_leaves") != len(leaves):
+            raise ValueError(
+                f"checkpoint at {path} has {manifest.get('n_leaves')} "
+                f"leaves; template has {len(leaves)}")
+        checksums = manifest.get("checksums")
         loaded = []
         for i, ref in enumerate(leaves):
-            arr = np.load(os.path.join(path, f"leaf_{i:05d}.npy"))
+            p = os.path.join(path, f"leaf_{i:05d}.npy")
+            if verify and checksums is not None:
+                digest = _file_sha256(p)
+                if digest != checksums[i]:
+                    raise CheckpointCorruptError(
+                        f"leaf {i} of {path}: sha256 {digest[:12]}… != "
+                        f"manifest {checksums[i][:12]}…")
+            arr = np.load(p)
             if hasattr(ref, "dtype") and arr.dtype != ref.dtype:
                 arr = arr.astype(ref.dtype)
             loaded.append(arr)

@@ -104,6 +104,34 @@ def peak_occupancy_suffix(bounds, n, k, observed_hwm) -> np.ndarray:
     return np.maximum(analytic, np.asarray(observed_hwm, np.float64))
 
 
+def evacuation_boundaries(bounds, tier: int, n=None) -> np.ndarray:
+    """Collapse ``tier`` to zero width in a boundary vector — the
+    tier-outage fallback for streams without a cost model (no analytic
+    suffix re-solve is possible, but residents still have to leave).
+
+    Tier ``t`` spans ``[b[t-1], b[t])`` with ``b[-1]=0`` and an implicit
+    ``+inf`` above the last boundary. An interior (or first) failed tier
+    is merged into the next *colder* tier (``b[tier] ← b[tier-1]``) —
+    demotion is the capacity-rich direction. The last tier has no colder
+    neighbour: its boundary is pushed past the window end (``n``, or
+    ``+inf`` when the stream length is unknown), promoting everything
+    into the hotter neighbour. Monotonicity of the vector is preserved
+    in both cases."""
+    b = np.asarray(bounds, np.float64).copy()
+    depth = b.shape[0]
+    if tier < 0 or tier > depth:
+        raise ValueError(f"tier {tier} out of range for a "
+                         f"{depth + 1}-tier placement")
+    if depth == 0:
+        raise ValueError("single-tier placement has no surviving tier "
+                         "to evacuate into")
+    if tier < depth:
+        b[tier] = 0.0 if tier == 0 else b[tier - 1]
+    else:
+        b[depth - 1] = np.inf if n is None else float(n)
+    return b
+
+
 def waterfill_grants(desired, budget: float) -> np.ndarray:
     """Water-filling split of a fleet-shared budget: each stream is
     granted ``min(desired_i, λ)`` with the water level λ chosen so the

@@ -23,12 +23,19 @@ def _on_tpu() -> bool:
 @partial(jax.jit, static_argnames=("block_n", "use_pallas"))
 def topk_filter(scores, threshold, *, block_n: int = 4096,
                 use_pallas: bool = True):
-    """scores (N,) vs scalar threshold → (mask int8 (N,), counts, tile_max)."""
+    """scores (N,) vs scalar threshold → (mask int8 (N,), counts, tile_max).
+
+    NaN scores are demoted to the pad value before the kernel runs: a
+    NaN fails every compare (it could never pass the bar anyway) but
+    would otherwise poison ``tile_max`` with NaN — callers that want NaN
+    *accounted for* rather than dropped quarantine upstream
+    (``streams.engine`` counts them as ``scores_quarantined``)."""
     n = scores.shape[0]
     bn = min(block_n, max(n, 128))
     pad = (-n) % bn
     sp = jnp.pad(scores.astype(jnp.float32), ((0, pad),),
                  constant_values=NEG_BIG)
+    sp = jnp.where(jnp.isnan(sp), NEG_BIG, sp)
     if use_pallas:
         mask, counts, tmax = topk_filter_pallas(
             sp, jnp.asarray(threshold), block_n=bn, interpret=not _on_tpu())

@@ -15,6 +15,7 @@ attribution on (``repro.obs.http``).
 from __future__ import annotations
 
 import argparse
+import signal
 import subprocess
 import sys
 
@@ -39,6 +40,14 @@ def main():
                     help="serve live /metrics and /snapshot from the "
                          "running engine (0 = ephemeral port); implies "
                          "obs with cost attribution")
+    ap.add_argument("--ckpt-dir", default=None, metavar="DIR",
+                    help="crash-consistent fleet checkpointing to DIR "
+                         "(repro.resilience; requires --tenants > 1), "
+                         "with a final blocking checkpoint on exit and "
+                         "on SIGTERM/SIGINT")
+    ap.add_argument("--ckpt-every", type=int, default=None, metavar="N",
+                    help="checkpoint every N ingested chunks "
+                         "(0 = final checkpoint only)")
     args, extra = ap.parse_known_args()
     import repro  # noqa: F401 — ensure PYTHONPATH is sane before spawning
     import os
@@ -64,7 +73,24 @@ def main():
         cmd += ["--obs-out", args.obs_out]
     if args.obs_port is not None:
         cmd += ["--obs-port", str(args.obs_port)]
-    raise SystemExit(subprocess.call(cmd + extra, env=env))
+    if args.ckpt_dir is not None:
+        cmd += ["--ckpt-dir", args.ckpt_dir]
+    if args.ckpt_every is not None:
+        cmd += ["--ckpt-every", str(args.ckpt_every)]
+    proc = subprocess.Popen(cmd + extra, env=env)
+
+    # Forward SIGTERM/SIGINT so the child runs its graceful shutdown
+    # (final blocking checkpoint + obs drain) instead of dying with us;
+    # the exit code below is then the child's graceful one.
+    def _forward(signum, frame):
+        try:
+            proc.send_signal(signum)
+        except ProcessLookupError:
+            pass
+
+    for s in (signal.SIGTERM, signal.SIGINT):
+        signal.signal(s, _forward)
+    raise SystemExit(proc.wait())
 
 
 if __name__ == "__main__":

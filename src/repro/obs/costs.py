@@ -415,6 +415,10 @@ class CostMonitor:
         self.first_alert_step = np.full(m, -1, np.int64)
         self.first_alert_seen = np.full(m, -1, np.int64)
         self.first_burn_seen = np.full(m, -1, np.int64)
+        # tier-outage grace: burn alerts are gated off per stream until
+        # this monitor step — a forced evacuation's relocation spend is
+        # not tenant overspend
+        self.burn_suppressed_until = np.zeros(m, np.int64)
         # whole-run totals (never reset): the regret meter's plan side
         self.realized_total = np.zeros(m, np.float64)
         self.planned_total = np.zeros(m, np.float64)
@@ -525,6 +529,10 @@ class CostMonitor:
             gate = dl > bernstein_threshold_weighted(vl, a, self.cmax) \
                 + self.law_slack * el
             burn_hit |= active & breach & gate
+        # outage-aware gating: rows inside an evacuation grace window
+        # never raise burn (the expected-cost trajectory was credited
+        # with the forced relocation bill via ``add_planned``)
+        burn_hit &= self.steps > self.burn_suppressed_until
         newly_burn = burn_hit & ~self.burn_alerted
         fb = newly_burn & (self.first_burn_seen < 0)
         self.first_burn_seen[fb] = b[fb].astype(np.int64)
@@ -585,6 +593,53 @@ class CostMonitor:
         self.checks[mask] = 0
         self.alerted[mask] = False
         self.burn_alerted[mask] = False
+
+    def suppress_burn(self, mask, steps: int) -> None:
+        """Gate the masked streams' burn channel off for ``steps`` more
+        monitor steps (chunks).  Used by tier-outage evacuation: the
+        forced relocation's spend spike is operator-induced, not tenant
+        overspend, so the burn alert must not fire on it."""
+        mask = np.asarray(mask, bool)
+        until = self.steps + int(steps)
+        self.burn_suppressed_until[mask] = np.maximum(
+            self.burn_suppressed_until[mask], until)
+
+    def add_planned(self, row: int, amount: float) -> None:
+        """Credit one stream's planned trajectory with an out-of-law
+        bill (e.g. a forced evacuation's relocation cost) so ``regret``
+        does not blame the placement for an operator decision."""
+        self.planned_total[row] += float(amount)
+
+    # ---- crash-consistent checkpointing ---------------------------------
+    _STATE_ARRAYS = (
+        "bounds", "seen", "writes_pt", "doc_steps_pt", "exp_writes_pt",
+        "dev", "var", "min_dev", "var_at_min", "max_dev", "var_at_max",
+        "exp_since", "exp_at_min", "exp_at_max", "checks", "alerted",
+        "burn_alerted", "first_alert_step", "first_alert_seen",
+        "first_burn_seen", "burn_suppressed_until", "realized_total",
+        "planned_total", "realized_wcost", "exp_wcost_total", "var_total")
+
+    def state_dict(self) -> dict:
+        """All mutable state as fresh numpy copies (safe to hand to an
+        async checkpoint writer while the engine keeps mutating)."""
+        out = {name: getattr(self, name).copy()
+               for name in self._STATE_ARRAYS}
+        out["steps"] = np.int64(self.steps)
+        out["hist"] = (np.stack([np.stack(h) for h in self._hist])
+                       if self._hist
+                       else np.zeros((0, 5, self.m), np.float64))
+        return out
+
+    def load_state(self, state: dict) -> None:
+        for name in self._STATE_ARRAYS:
+            ref = getattr(self, name)
+            arr = np.asarray(state[name]).astype(ref.dtype).reshape(
+                ref.shape)
+            setattr(self, name, arr.copy())
+        self.steps = int(state["steps"])
+        hist = np.asarray(state["hist"], np.float64)
+        self._hist = [tuple(hist[i, j].copy() for j in range(5))
+                      for i in range(hist.shape[0])]
 
     def cost_z(self) -> dict:
         """(M,) whole-run realized vs expected cost-weighted writes with

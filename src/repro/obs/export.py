@@ -26,6 +26,8 @@ _COUNTER_LEAVES = frozenset({
     "chunks", "drift_fired", "observed", "writes", "reads", "deletes",
     "migrations", "relocations", "resident_steps", "recorded", "dropped",
     "checks", "steps", "hits", "misses", "compiles",
+    "scores_quarantined", "chunks_ingested", "checkpoints_written",
+    "redeliveries_dropped", "delivery_retries", "tier_outages",
 })
 
 # HELP text per terminal path component (kept to the metrics whose
@@ -51,6 +53,14 @@ _HELP = {
                       "window",
     "recorded": "events captured on the obs timeline",
     "dropped": "events dropped past max_events",
+    "scores_quarantined": "non-finite scores swapped for pad slots "
+                          "before the reservoir compare",
+    "chunks_ingested": "chunk boundaries consumed (the ingest cursor)",
+    "checkpoints_written": "fleet checkpoints committed (atomic renames)",
+    "redeliveries_dropped": "duplicate chunk deliveries skipped by the "
+                            "idempotent redelivery guard",
+    "delivery_retries": "transient chunk-delivery failures retried",
+    "tier_outages": "tier outage declarations (cumulative)",
 }
 
 

@@ -32,10 +32,16 @@ class ObsServer:
     def __init__(self, httpd: ThreadingHTTPServer, thread: threading.Thread):
         self._httpd = httpd
         self._thread = thread
+        self._stopped = False
         self.port = int(httpd.server_address[1])
         self.url = f"http://127.0.0.1:{self.port}"
 
     def stop(self) -> None:
+        """Drain and close the endpoint. Idempotent — shutdown paths
+        (signal handler + normal exit) may both call it."""
+        if self._stopped:
+            return
+        self._stopped = True
         self._httpd.shutdown()
         self._httpd.server_close()
         self._thread.join(timeout=5.0)

@@ -332,6 +332,30 @@ class ResidualMonitor:
         self.checks[mask] = 0
         self.alerted[mask] = False
 
+    # ---- crash-consistent checkpointing ---------------------------------
+
+    _STATE_ARRAYS = (
+        "seen", "writes", "dev", "var", "min_dev", "var_at_min",
+        "max_dev", "var_at_max", "exp_since", "exp_at_min", "exp_at_max",
+        "checks", "alerted", "first_alert_step", "first_alert_seen",
+        "exp_total", "var_total")
+
+    def state_dict(self) -> dict:
+        """All mutable state as fresh numpy copies (safe to hand to an
+        async checkpoint writer while the engine keeps updating)."""
+        out = {name: getattr(self, name).copy()
+               for name in self._STATE_ARRAYS}
+        out["steps"] = np.int64(self.steps)
+        return out
+
+    def load_state(self, state: dict) -> None:
+        for name in self._STATE_ARRAYS:
+            ref = getattr(self, name)
+            arr = np.asarray(state[name]).astype(ref.dtype).reshape(
+                ref.shape)
+            setattr(self, name, arr.copy())
+        self.steps = int(state["steps"])
+
     def write_z(self) -> dict:
         """(M,) whole-run realized vs chunk-law expected cumulative
         writes with the z-score — the snapshot's exported residual

@@ -250,7 +250,8 @@ class Replanner:
 
     # ---- the suffix solve ------------------------------------------------
 
-    def _solve_group(self, idxs, n_seen, rho, b0):
+    def _solve_group(self, idxs, n_seen, rho, b0,
+                     exclude_tiers=frozenset()):
         """Re-solve one uniform-tier-count group. Returns (total (R,),
         bounds (R, t-1), cost_old (R,)).
 
@@ -258,8 +259,16 @@ class Replanner:
         (``online.replan_device``, the ``kernels.plan_solve`` reduction)
         for hierarchies the exact enumeration covers; the NumPy loop
         below remains the oracle reference (``backend="numpy"``) the
-        device path is property-tested against."""
+        device path is property-tested against.
+
+        ``exclude_tiers`` (tier-outage degradation) drops every tier
+        subset that touches a masked tier, so the chosen plan gives the
+        failed tier zero width over the whole window — residents are
+        relocated off it by the caller's ``apply_boundaries`` and no
+        future doc lands there. The enumeration runs on the NumPy oracle
+        path (the device program enumerates the full subset lattice)."""
         cfg = self.config
+        exclude_tiers = frozenset(exclude_tiers)
         t = self.models[idxs[0]].t
         r = len(idxs)
         st = self._stacks[t]
@@ -271,7 +280,7 @@ class Replanner:
         n0 = np.asarray(n_seen, np.float64)
         rho = np.asarray(rho, np.float64)
         backend = self.backend if self.backend is not None else "auto"
-        if backend != "numpy":
+        if backend != "numpy" and not exclude_tiers:
             try:
                 from . import replan_device
                 if replan_device.available(t):
@@ -294,6 +303,8 @@ class Replanner:
         best_total = np.full(r, np.inf)
         best_bounds = np.zeros((r, t - 1))
         for sub in shp._tier_subsets(t):
+            if exclude_tiers and exclude_tiers.intersection(sub):
+                continue  # tier outage: subsets touching a masked tier
             sa = np.asarray(sub)
             ts = sa.shape[0]
             lin = (rpw * k * rho / s_n)[:, None] * cr[:, sa]
@@ -355,7 +366,8 @@ class Replanner:
         return best_total, best_bounds, cost_old, (cw, cr, n0, k, n, cap)
 
     def replan(self, rows, n_seen, rho, boundaries, migrate,
-               hwm=None) -> ReplanDecision:
+               hwm=None, exclude_tiers=frozenset(),
+               force: bool = False) -> ReplanDecision:
         """Re-solve the flagged streams. ``rows`` index into the model
         list; ``boundaries[i]`` is each stream's current vector (its own
         tier depth); ``migrate`` flags cascade streams (skipped). ``rho``
@@ -368,7 +380,13 @@ class Replanner:
         — a peak already witnessed under drift cannot be un-rung), and a
         re-solved plan whose projected peaks violate the capacities is
         reported infeasible so the caller can hand the tenant to
-        admission control."""
+        admission control.
+
+        ``exclude_tiers`` masks failed tiers out of the feasible subset
+        lattice (tier-outage degradation); ``force`` applies every
+        feasible re-solve regardless of the hysteresis margin — an
+        evacuation is a feasibility decision, not a savings decision, so
+        a costlier suffix plan must still be applied."""
         rows = np.asarray(rows, np.int64)
         n_seen = np.asarray(n_seen, np.float64)
         rho = np.asarray(rho, np.float64)
@@ -393,7 +411,8 @@ class Replanner:
             b0 = np.array([old[j] for j in idxs], np.float64)
             total, bounds, c_old, (cw, cr, n0, k, n, cap) = \
                 self._solve_group([rows[j] for j in idxs], n_seen[idxs],
-                                  rho[idxs], b0)
+                                  rho[idxs], b0,
+                                  exclude_tiers=exclude_tiers)
             g_bill, g_moves = relocation_bill(b0, bounds, n0, k, cr, cw)
             feas = np.isfinite(total)
             occ = None
@@ -407,7 +426,7 @@ class Replanner:
                 feas = feas & np.all(occ <= cap * (1 + 1e-9), axis=1)
             margin = self.config.min_rel_saving * np.maximum(
                 np.abs(c_old), 1e-12)
-            apply_g = feas & (total < c_old - margin)
+            apply_g = feas & (force | (total < c_old - margin))
             ii = np.asarray(idxs, np.int64)
             feasible[ii] = feas
             cost_old[ii] = c_old

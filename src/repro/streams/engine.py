@@ -206,12 +206,25 @@ def _make_step(use_kernel_filter: bool, block_n: int, drift_cfg=None,
 
     def step(states, batches, dstates, mstate, cstates):
         if with_metrics and mesh is not None:
-            # inside shard_map: squeeze this shard's (1, 7) counter
+            # inside shard_map: squeeze this shard's (1, 8) counter
             # block to the flat layout the accumulate laws expect
             mstate = metrics_mod.shard_local(mstate)
         new_states, wrotes, evs, new_dstates = [], [], [], []
         new_cstates = []
         for bi, (st, (s, i)) in enumerate(zip(states, batches)):
+            # quarantine non-finite scores before any compare sees them:
+            # NaN fails every comparison (it would never be admitted and
+            # never counted) and ±inf corrupts the entry bar / tile max.
+            # Both demote to inert pad slots; the count is folded into
+            # the metrics state (SCORES_QUARANTINED). With all-finite
+            # input the wheres are identity, so outputs are bit-equal to
+            # the unsanitized step.
+            bad = (i >= 0) & ~jnp.isfinite(s)
+            s = jnp.where(bad, -jnp.inf, s)
+            i = jnp.where(bad, PAD_ID, i)
+            if with_metrics:
+                mstate = metrics_mod.accumulate_quarantine(
+                    mstate, bad.sum(dtype=jnp.int32))
             if bucket_engines and bucket_engines[bi] == "logmem":
                 new, wrote = logmem.update(st, s, i, int(bucket_ks[bi]),
                                            block_n=block_n,
@@ -476,6 +489,7 @@ class StreamEngine:
         self.replan_events: List[ReplanEvent] = []
         self.admission_events: List[AdmissionEvent] = []
         self._drift_states = None
+        self._replanner = None
         if replan is not None:
             from repro.online import drift as drift_mod
             from repro.online.replan import Replanner
@@ -557,6 +571,20 @@ class StreamEngine:
             with_costs=self._cost_states is not None)
         self._step = self._step_factory(False)
         self._donating_step = None  # built lazily by ingest_chunks
+        # resilience (repro.resilience): the ingest cursor is the chunk
+        # sequence number — checkpoint step, and the idempotent
+        # redelivery guard's high-water mark; a checkpointer attached via
+        # ``attach_checkpointer`` is invoked at every chunk boundary
+        # (after the host meter drain, before the next dispatch, so the
+        # device buffers it snapshots are final and not yet donated)
+        self.chunks_ingested = 0
+        self._checkpoint = None
+        # tier-outage bookkeeping: failed tiers are masked out of the
+        # re-planner's feasible set; a recovered tier stays masked for a
+        # hysteresis window (flap damping) before plans may use it again
+        self._failed_tiers: Dict[int, int] = {}
+        self._recovering_tiers: Dict[int, int] = {}
+        self._tier_outages = 0
 
     @property
     def m(self) -> int:
@@ -639,7 +667,13 @@ class StreamEngine:
             for bi in range(len(self.buckets)):
                 b = self.buckets[bi]
                 mb = b.m
-                _, dense_ids = dense[bi]
+                dense_scores, dense_ids = dense[bi]
+                # mirror the device quarantine: docs whose score is
+                # non-finite were demoted to pad slots in the step, so
+                # the host meter must not count them as observed either
+                if not np.isfinite(dense_scores).all():
+                    dense_ids = np.where(np.isfinite(dense_scores),
+                                         dense_ids, router.PAD_ID)
                 # logmem buckets have no resident ids: no cascade check,
                 # and their (mb, 0) eviction set scatters nothing
                 st_ids = (None if b.engine == "logmem"
@@ -708,6 +742,23 @@ class StreamEngine:
         batches = self._stage_batches(dense)
         wrotes, evs, new_states = self._dispatch(batches, donate)
         self._consume(dense, wrotes, evs, new_states, meter=meter)
+        self._chunk_boundary()
+
+    def _chunk_boundary(self) -> None:
+        """Advance the ingest cursor and fire the chunk-boundary
+        checkpoint hook (device buffers are final here and the next
+        chunk has not been dispatched, so a snapshot is consistent and
+        its device→host copies cannot race a donation)."""
+        self.chunks_ingested += 1
+        if self._checkpoint is not None:
+            self._checkpoint.on_chunk(self)
+
+    def attach_checkpointer(self, checkpointer) -> None:
+        """Install a chunk-boundary checkpoint hook (an object with
+        ``on_chunk(engine)`` — see ``resilience.FleetCheckpointer``)."""
+        if not hasattr(checkpointer, "on_chunk"):
+            raise TypeError("checkpointer needs an on_chunk(engine) hook")
+        self._checkpoint = checkpointer
 
     def ingest_dense(self, dense, *, meter: bool = True) -> None:
         """Dense per-bucket ingestion, bypassing the host router: one
@@ -753,6 +804,10 @@ class StreamEngine:
             staged = self._stage_batches(nxt) if nxt is not None else None
             # host consumption blocks on chunk t's outputs last
             self._consume(dense, wrotes, evs, new_states, meter=meter)
+            # chunk-boundary checkpoint: the device→host copies read
+            # finished buffers, the npy write runs on the manager's
+            # worker thread while chunk t+1 (already staged) computes
+            self._chunk_boundary()
             count += 1
         return count
 
@@ -796,17 +851,20 @@ class StreamEngine:
             depth = (cm.t - 1 if hasattr(cm, "t")
                      else int(np.isfinite(b).sum()))
             bounds.append(tuple(b[:depth]))
+        exclude = self._excluded_tier_set()
         if self._tracer is not None:
             with self._tracer.span("replan", flagged=len(fired_rows)):
                 dec = self._replanner.replan(
                     rows, self.meter.observed[rows], np.asarray(rhos),
                     bounds, self.meter.migrate[rows],
-                    hwm=self.meter.occupancy_hwm[rows])
+                    hwm=self.meter.occupancy_hwm[rows],
+                    exclude_tiers=exclude)
         else:
             dec = self._replanner.replan(rows, self.meter.observed[rows],
                                          np.asarray(rhos), bounds,
                                          self.meter.migrate[rows],
-                                         hwm=self.meter.occupancy_hwm[rows])
+                                         hwm=self.meter.occupancy_hwm[rows],
+                                         exclude_tiers=exclude)
         touched_buckets = set()
         for j, row in enumerate(rows):
             if not dec.considered[j]:
@@ -905,6 +963,218 @@ class StreamEngine:
                               row=row, position=position,
                               admitted=bool(getattr(decision, "admitted",
                                                     False)))
+
+    # ---- tier-outage graceful degradation -------------------------------
+
+    def _bucket_of(self, row: int) -> Tuple[int, int]:
+        """(bucket index, row within bucket) of a global meter row."""
+        for bi, rows in enumerate(self._global_rows):
+            if rows.size and rows[0] <= row <= rows[-1]:
+                return bi, int(row - rows[0])
+        raise KeyError(row)
+
+    def _apply_row_bounds(self, row: int, new_bounds) -> int:
+        """Apply a new boundary vector to one stream everywhere it
+        lives: host meter (re-tiering residents), device cost ledger,
+        and the cost monitor's planned trajectory. Returns the number
+        of relocated residents."""
+        bi, jb = self._bucket_of(row)
+        ids_arg = (None if self.buckets[bi].engine == "logmem"
+                   else np.asarray(self._states[bi].ids[jb]))
+        moved = self.meter.apply_boundaries(row, new_bounds, ids_arg)
+        if self._cost_states is not None:
+            from repro.obs import costs as costs_mod
+            self._cost_states[bi] = costs_mod.set_bucket_bounds(
+                self._cost_states[bi], jb, self.meter.boundaries[row])
+            self._cost_monitor.set_bounds(row, self.meter.boundaries[row])
+        return moved
+
+    def _excluded_tier_set(self) -> frozenset:
+        """Tiers no plan may place onto right now: failed tiers, plus
+        recovered tiers still inside their hysteresis window (expired
+        entries are purged — flap damping)."""
+        expired = [t for t, until in self._recovering_tiers.items()
+                   if self.chunks_ingested >= until]
+        for t in expired:
+            del self._recovering_tiers[t]
+        return frozenset(self._failed_tiers) | frozenset(
+            self._recovering_tiers)
+
+    def tier_outage(self, tier: int, *, burn_grace: int = 8) -> Dict:
+        """Declare a storage tier failed: mask it out of every future
+        re-plan's feasible set and evacuate affected streams onto the
+        surviving tiers now — a forced constrained suffix re-solve for
+        streams with a cost model (relocation hop-priced, applied on
+        feasibility rather than savings), a geometric boundary merge
+        (``core.constraints.evacuation_boundaries``) for the rest.
+
+        The relocation spend spike is operator-induced, so the cost
+        channel is kept honest rather than silenced wholesale: the
+        evacuation bill is credited to each stream's planned trajectory
+        (``CostMonitor.add_planned`` — regret does not blame the
+        placement) and budget-burn alerts are suppressed for
+        ``burn_grace`` chunks on the evacuated rows only.
+
+        Returns a summary dict; emits ``tier_outage`` (and per-stream
+        ``tier_evacuation``) on the obs event log. Idempotent: a tier
+        already failed returns ``{"already_failed": True}`` without
+        re-evacuating (flap protection on the failure side)."""
+        nt = self.meter.n_tiers
+        if not 0 <= tier < nt:
+            raise ValueError(f"tier {tier} out of range (fleet has {nt} "
+                             "tiers)")
+        if tier in self._failed_tiers:
+            return {"tier": tier, "already_failed": True,
+                    "rows_evacuated": 0, "rows": [], "moved_docs": 0,
+                    "bill": 0.0, "skipped_rows": [],
+                    "infeasible_rows": []}
+        # a re-failure during recovery hysteresis folds into the outage
+        self._recovering_tiers.pop(tier, None)
+        self._failed_tiers[tier] = self.chunks_ingested
+        self._tier_outages += 1
+        summary = self._evacuate_tier(tier, burn_grace=burn_grace)
+        if self._tracer is not None:
+            self._tracer.emit(
+                "tier_outage", tier=tier, chunk=self.chunks_ingested,
+                rows_evacuated=summary["rows_evacuated"],
+                moved_docs=summary["moved_docs"], bill=summary["bill"],
+                skipped=len(summary["skipped_rows"]),
+                infeasible=len(summary["infeasible_rows"]))
+        return summary
+
+    def tier_recover(self, tier: int, *, hysteresis: int = 2) -> None:
+        """Clear a tier's outage. The tier stays masked from re-plans
+        for ``hysteresis`` more chunks (flap damping) before placements
+        may use it again; evacuated streams migrate back only through
+        the ordinary re-plan channel — there is no forced
+        un-evacuation."""
+        if tier not in self._failed_tiers:
+            raise ValueError(f"tier {tier} is not failed")
+        del self._failed_tiers[tier]
+        self._recovering_tiers[tier] = self.chunks_ingested + int(hysteresis)
+        if self._tracer is not None:
+            self._tracer.emit(
+                "tier_recovered", tier=tier, chunk=self.chunks_ingested,
+                masked_until_chunk=int(self._recovering_tiers[tier]))
+
+    def _evacuate_tier(self, tier: int, *, burn_grace: int) -> Dict:
+        """Move every affected stream off a failed tier. Affected =
+        the tier exists in the stream's placement AND (residents live
+        there now, or future arrivals would land there). Cascade
+        (migrating) streams cannot re-tier residents and are skipped,
+        as are single-tier streams (no surviving tier to move into) —
+        both are reported, not silently dropped."""
+        from repro.core import constraints as cons_mod
+        meter = self.meter
+        b = meter.boundaries
+        m = self.m
+        observed = meter.observed.astype(np.float64)
+        lo = b[:, tier - 1] if tier > 0 else np.zeros(m)
+        hi = (b[:, tier] if tier < b.shape[1] else np.full(m, np.inf))
+        exists = np.isfinite(lo) if tier > 0 else np.ones(m, bool)
+        resident = ((meter.occupancy[:, tier] > 0)
+                    if tier < meter.n_tiers else np.zeros(m, bool))
+        future = (hi > lo) & (hi > observed)
+        affected = exists & (resident | future)
+        rr0 = meter.reloc_reads.copy()
+        rw0 = meter.reloc_writes.copy()
+        evacuated: List[int] = []
+        skipped: List[int] = []
+        infeasible: List[int] = []
+        touched: set = set()
+        moved_total = 0
+        exclude = self._excluded_tier_set()
+        for row in np.flatnonzero(affected):
+            row = int(row)
+            if meter.migrate[row]:
+                skipped.append(row)
+                continue
+            depth = int(np.isfinite(b[row]).sum())
+            if depth == 0:
+                skipped.append(row)  # single-tier: nowhere to go
+                continue
+            old = tuple(float(x) for x in b[row, :depth])
+            moved = 0
+            applied = False
+            if (self._model_of_row.get(row) is not None
+                    and self._replanner is not None):
+                rho = 1.0
+                if self._drift_states is not None:
+                    from repro.online import drift as drift_mod
+                    bi, jb = self._bucket_of(row)
+                    rho = float(np.asarray(drift_mod.rho_hat(
+                        self._drift_states[bi],
+                        self.replan_config.drift))[jb])
+                dec = self._replanner.replan(
+                    np.asarray([row], np.int64), meter.observed[[row]],
+                    np.asarray([rho]), [old], meter.migrate[[row]],
+                    hwm=meter.occupancy_hwm[[row]],
+                    exclude_tiers=exclude, force=True)
+                if not dec.feasible[0]:
+                    # the surviving tiers cannot honor the constraints:
+                    # negotiate next-window terms, but still evacuate —
+                    # data cannot stay on a dead tier
+                    infeasible.append(row)
+                    self._negotiate_admission(row,
+                                              int(meter.observed[row]))
+                if dec.applied[0]:
+                    moved = self._apply_row_bounds(row, dec.new_bounds[0])
+                    applied = True
+            if not applied:
+                newb = cons_mod.evacuation_boundaries(old, tier)
+                moved = self._apply_row_bounds(row, tuple(newb))
+            evacuated.append(row)
+            touched.add(self._bucket_of(row)[0])
+            moved_total += moved
+            if self._tracer is not None:
+                self._tracer.emit(
+                    "tier_evacuation", stream_id=self._sid_of_row[row],
+                    row=row, tier=tier, moved_docs=moved,
+                    replanned=applied,
+                    position=int(meter.observed[row]))
+        bill = 0.0
+        bills = np.zeros(m, np.float64)
+        if self._pricing is not None:
+            d_rr = (meter.reloc_reads - rr0).astype(np.float64)
+            d_rw = (meter.reloc_writes - rw0).astype(np.float64)
+            bills = (d_rr * self._pricing["cr"]).sum(1) \
+                + (d_rw * self._pricing["cw"]).sum(1)
+            bill = float(bills.sum())
+        if evacuated:
+            emask = np.zeros(m, bool)
+            emask[evacuated] = True
+            # the evacuation consumed whatever evidence the monitors had
+            # anchored to the old placement — restart it, like a re-plan
+            if self._drift_states is not None:
+                from repro.online import drift as drift_mod
+                for bi in sorted(touched):
+                    rows_b = self._global_rows[bi]
+                    bmask = np.zeros(self._pad_m[bi], bool)
+                    bmask[[r - int(rows_b[0]) for r in evacuated
+                           if rows_b[0] <= r <= rows_b[-1]]] = True
+                    self._drift_states[bi] = drift_mod.reset_where(
+                        self._drift_states[bi], jnp.asarray(bmask))
+                    if self.mesh is not None:
+                        from repro.parallel import fleet
+                        self._drift_states[bi] = fleet.shard_rows(
+                            self.mesh, self._drift_states[bi])
+            if self._cost_states is not None and self.mesh is not None:
+                from repro.parallel import fleet
+                for bi in sorted(touched):
+                    self._cost_states[bi] = fleet.shard_rows(
+                        self.mesh, self._cost_states[bi])
+            if self._residuals is not None:
+                self._residuals.reset_where(emask)
+            if self._cost_monitor is not None:
+                self._cost_monitor.reset_where(emask)
+                self._cost_monitor.suppress_burn(emask, burn_grace)
+                for row in evacuated:
+                    self._cost_monitor.add_planned(row, float(bills[row]))
+        return {"tier": tier, "already_failed": False,
+                "rows_evacuated": len(evacuated),
+                "rows": [int(r) for r in evacuated],
+                "moved_docs": int(moved_total), "bill": bill,
+                "skipped_rows": skipped, "infeasible_rows": infeasible}
 
     def drift_scores(self) -> Dict[int, float]:
         """{stream_id: normalized change score} (>= 1 fires; online mode
@@ -1011,6 +1281,15 @@ class StreamEngine:
         if self._cost_states is not None:
             from repro.obs import costs as costs_mod
             out["costs"] = costs_mod.snapshot(self)
+        out["resilience"] = {
+            "chunks_ingested": int(self.chunks_ingested),
+            "failed_tiers": sorted(self._failed_tiers),
+            "recovering_tiers": sorted(self._recovering_tiers),
+            "tier_outages": int(self._tier_outages),
+        }
+        if (self._checkpoint is not None
+                and hasattr(self._checkpoint, "snapshot")):
+            out["resilience"]["checkpoint"] = self._checkpoint.snapshot()
         return out
 
     def cost_summary(self) -> Dict:

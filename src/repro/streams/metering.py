@@ -261,6 +261,27 @@ class FleetMeter:
                                              self.occupancy[row])
         return moved
 
+    # ---- crash-consistent checkpointing ---------------------------------
+
+    _STATE_ARRAYS = (
+        "boundaries", "floor", "observed", "writes", "reads", "deletes",
+        "migrations", "relocations", "mig_reads", "mig_writes",
+        "reloc_reads", "reloc_writes", "doc_steps", "occupancy",
+        "occupancy_hwm")
+
+    def state_dict(self) -> Dict[str, np.ndarray]:
+        """All mutable ledgers as fresh numpy copies (safe to hand to an
+        async checkpoint writer while the engine keeps recording)."""
+        return {name: getattr(self, name).copy()
+                for name in self._STATE_ARRAYS}
+
+    def load_state(self, state: Dict[str, np.ndarray]) -> None:
+        for name in self._STATE_ARRAYS:
+            ref = getattr(self, name)
+            arr = np.asarray(state[name]).astype(ref.dtype).reshape(
+                ref.shape)
+            setattr(self, name, arr.copy())
+
     def record_reads(self, stream_rows, doc_ids) -> None:
         """Account the end-of-window top-K read (the consumer side)."""
         stream_rows = np.asarray(stream_rows, np.int64)

@@ -300,12 +300,12 @@ def test_planner_waterfill_dispatches_to_mesh():
 # ---------------------------------------------------------------------------
 
 def test_metrics_sharded_snapshot_aggregates():
-    """A (D, 7) sharded MetricsState snapshots to fleet-global numbers:
+    """A (D, 8) sharded MetricsState snapshots to fleet-global numbers:
     counts sum across shards, CHUNKS and the drift high-water take the
     max (every shard bumps CHUNKS once per chunk)."""
     ms = obs_metrics.init(shards=3)
     assert ms.sharded
-    counts = np.zeros((3, 7), np.int32)
+    counts = np.zeros((3, obs_metrics.N_SLOTS), np.int32)
     counts[:, obs_metrics.DOCS] = [10, 20, 30]
     counts[:, obs_metrics.CHUNKS] = [4, 4, 4]
     counts[:, obs_metrics.DRIFT_FIRED] = [1, 0, 2]
@@ -319,9 +319,9 @@ def test_metrics_sharded_snapshot_aggregates():
     assert snap["drift_score_max"] == 2.0
     # shard_local / shard_pack round-trip the per-shard layout
     local = obs_metrics.shard_local(ms)
-    assert local.counts.shape == (7,)
+    assert local.counts.shape == (obs_metrics.N_SLOTS,)
     packed = obs_metrics.shard_pack(local)
-    assert np.asarray(packed.counts).shape == (1, 7)
+    assert np.asarray(packed.counts).shape == (1, obs_metrics.N_SLOTS)
 
 
 def test_mesh_key_shapes():
@@ -330,6 +330,58 @@ def test_mesh_key_shapes():
         mesh = _mesh()
         key = obs_jits.mesh_key(mesh)
         assert key == (("fleet", fleet.n_shards(mesh)),)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint resharding: a snapshot restores onto ANY mesh size, bitwise
+# ---------------------------------------------------------------------------
+
+@needs_mesh
+@pytest.mark.parametrize("direction", ["up", "down"])
+def test_checkpoint_reshard_bit_identity(tmp_path, direction):
+    """A checkpoint written on 1 device restores onto the mesh ("up")
+    and a mesh checkpoint restores onto 1 device ("down"), then resumes
+    to finals bitwise equal to an uninterrupted single-device run —
+    snapshot strips shard padding, restore re-pads to the target
+    engine's multiple, and the canonical metrics counters re-aggregate
+    exactly. Mixed exact + logmem fleet, M not a shard multiple."""
+    from repro.resilience import FleetCheckpointer
+    mesh = _mesh()
+    src_mesh, dst_mesh = (None, mesh) if direction == "up" else (mesh, None)
+    m, batch, n_chunks, cut = 7, 6, 12, 7
+    rng = np.random.default_rng(900)
+    traces = rng.standard_normal((m, batch * n_chunks)).astype(np.float32)
+
+    def build(mesh):
+        specs = [StreamSpec(stream_id=i, k=32, r=48.0, engine="logmem")
+                 if i % 3 == 2 else StreamSpec(stream_id=i, k=4, r=48.0)
+                 for i in range(m)]
+        return StreamEngine(specs, obs=Observability(ObsConfig()),
+                            mesh=mesh)
+
+    def feed(engine, t):
+        perm = np.random.default_rng(7000 + t).permutation(m * batch)
+        sids = np.repeat(np.arange(m), batch)[perm]
+        dids = np.tile(np.arange(t * batch, (t + 1) * batch), m)[perm]
+        scores = traces[:, t * batch:(t + 1) * batch].reshape(-1)[perm]
+        engine.ingest(sids, scores, dids)
+
+    ref = build(None)
+    for t in range(n_chunks):
+        feed(ref, t)
+
+    src = build(src_mesh)
+    for t in range(cut):
+        feed(src, t)
+    ck = FleetCheckpointer(str(tmp_path), every=0)
+    ck.save(src, blocking=True)
+
+    dst = build(dst_mesh)
+    FleetCheckpointer(str(tmp_path)).restore(dst)
+    assert dst.chunks_ingested == cut
+    for t in range(cut, n_chunks):
+        feed(dst, t)
+    _assert_engines_identical(ref, dst)
 
 
 # ---------------------------------------------------------------------------
